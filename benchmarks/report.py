@@ -1,0 +1,93 @@
+"""Generate the EXPERIMENTS.md tables from experiments/{dryrun,roofline}
+JSON records.  Usage: PYTHONPATH=src python benchmarks/report.py"""
+import json
+import os
+from collections import defaultdict
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRY = os.path.join(HERE, "..", "experiments", "dryrun")
+ROOF = os.path.join(HERE, "..", "experiments", "roofline")
+
+ARCH_ORDER = ["mamba2_780m", "granite_8b", "qwen3_4b", "minicpm_2b",
+              "gemma3_27b", "mixtral_8x22b", "arctic_480b",
+              "musicgen_medium", "llama32_vision_90b", "recurrentgemma_9b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    out = {}
+    if not os.path.isdir(d):
+        return out
+    for name in os.listdir(d):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                r = json.load(f)
+            out[r["arch"], r["shape"], r.get("mesh", "16x16")] = r
+    return out
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(x) >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table():
+    recs = load(DRY)
+    print("| arch | shape | mesh | status | compile s | per-dev FLOPs "
+          "| per-dev HLO bytes | collective bytes | peak mem/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("16x16", "2x16_16", "2x16x16"):
+                r = recs.get((a, s, m))
+                if r is None:
+                    continue
+                if r["status"] != "OK":
+                    print(f"| {a} | {s} | {r['mesh']} | {r['status']} "
+                          f"| - | - | - | - | - |")
+                    continue
+                mem = r.get("memory", {})
+                peak = mem.get("peak_bytes") or mem.get("temp_bytes")
+                print(f"| {a} | {s} | {r['mesh']} | OK | {r['compile_s']} "
+                      f"| {r['flops']:.2e} | {fmt_b(r['hlo_bytes'])} "
+                      f"| {fmt_b(r['collective_bytes']['total'])} "
+                      f"| {fmt_b(peak)} |")
+
+
+def roofline_table():
+    recs = load(ROOF)
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL_FLOPs/dev | useful ratio | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = None
+            for m in ("16x16", "2x16x16"):
+                r = recs.get((a, s, m)) or r
+            if r is None:
+                continue
+            if r["status"] != "OK":
+                print(f"| {a} | {s} | - | - | - | SKIP | - | - | "
+                      f"full attention @500k |")
+                continue
+            note = {"compute": "FLOP-bound", "memory": "HBM-bound",
+                    "collective": "ICI-bound"}[r["dominant"]]
+            print(f"| {a} | {s} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                  f"| {r['collective_s']:.3f} | {r['dominant']} "
+                  f"| {r['model_flops_per_device']:.2e} "
+                  f"| {r['useful_flops_ratio']:.2f} | {note} |")
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("dryrun", "both"):
+        print("## Dry-run records\n")
+        dryrun_table()
+    if which in ("roofline", "both"):
+        print("\n## Roofline table\n")
+        roofline_table()

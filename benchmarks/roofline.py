@@ -1,0 +1,169 @@
+"""Roofline analysis from the compiled dry-run.
+
+Because HLO cost_analysis counts a ``lax.scan`` body ONCE (trip count is a
+runtime quantity), per-cell roofline terms are derived by **two-point layer
+extrapolation**: compile the cell at two unrolled depths (P and 2P pattern
+periods at full width, full mesh, full batch), take the per-period delta,
+and extrapolate linearly to the full depth:
+
+    total(L) = outside + num_periods x (delta per period)
+
+Every term we report (matmul FLOPs, HBM bytes, collective bytes) is exactly
+linear in layer count, so the extrapolation is exact up to GSPMD layout
+noise between the two compiles.  The full-depth scanned compile (from
+repro.launch.dryrun) remains the compile-success + memory-fit evidence.
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute_term_s    = HLO_FLOPs / (chips x PEAK)      [per-device FLOPs -> /chip]
+  memory_term_s     = HLO_bytes / (chips x HBM_BW)
+  collective_term_s = collective_bytes / (chips x ICI_BW)
+
+cost_analysis is per-device post-partitioning, so chips=1 in the formulas
+below (the division already happened); the roofline step time is
+max(compute, memory, collective) and the reported fraction is
+compute_term / roofline_time (how compute-bound the cell is; 1.0 = perfect).
+"""
+import os
+if __name__ == "__main__":                     # noqa: E402 — before jax init
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (per-chip aggregate approximation)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRYRUN_DIR = os.path.join(HERE, "..", "experiments", "dryrun")
+OUT_DIR = os.path.join(HERE, "..", "experiments", "roofline")
+
+
+def _compile_reduced(arch: str, shape_name: str, multi_pod: bool,
+                     periods: int) -> Optional[Dict[str, Any]]:
+    """Compile an unrolled reduced-depth variant; returns cost terms."""
+    from repro.common.config import SHAPES
+    from repro.configs import get_config
+    from repro.launch import dryrun as dr
+    from repro.launch.mesh import make_production_mesh, parallel_config_for
+
+    cfg = get_config(arch)
+    p_len = cfg.pattern_period
+    tail = cfg.num_tail_layers
+    red = cfg.replace(num_layers=p_len * periods + tail, scan_layers=False,
+                      remat=False)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pc = parallel_config_for(mesh)
+    fn, args = dr.build_cell(red, shape, mesh, pc)
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    coll = dr.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll["total"],
+            "coll_by_kind": coll}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); decode D=tokens
+    per step = global_batch."""
+    from repro.common.config import SHAPES
+    from repro.configs import get_config
+    from repro.models.model import count_active_params
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = count_active_params(cfg)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch                    # one token per sequence
+    return 2.0 * n * d
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 p1: int = 1, p2: int = 2) -> Dict[str, Any]:
+    from repro.common.config import SHAPES
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        from repro.launch.dryrun import LONG_CONTEXT_OK
+        if cfg.name not in LONG_CONTEXT_OK:
+            return {"arch": arch, "shape": shape_name, "status": "SKIP"}
+
+    t0 = time.time()
+    a = _compile_reduced(arch, shape_name, multi_pod, p1)
+    b = _compile_reduced(arch, shape_name, multi_pod, p2)
+    dp = {k: (b[k] - a[k]) / (p2 - p1) for k in ("flops", "bytes", "coll")}
+    outside = {k: a[k] - p1 * dp[k] for k in dp}
+    total = {k: outside[k] + cfg.num_periods * dp[k] for k in dp}
+
+    mesh = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    compute_s = total["flops"] / PEAK_FLOPS        # per-chip flops already
+    memory_s = total["bytes"] / HBM_BW
+    coll_s = total["coll"] / ICI_BW
+    roofline_s = max(compute_s, memory_s, coll_s)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    mf = model_flops(arch, shape_name)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh, "status": "OK",
+        "per_period": dp, "outside": outside,
+        "total_per_device": total,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "roofline_s": roofline_s,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / chips,
+        "useful_flops_ratio": (mf / chips) / max(total["flops"], 1.0),
+        "compute_fraction_of_roofline": compute_s / max(roofline_s, 1e-30),
+        "analyze_s": round(time.time() - t0, 1),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    from repro.common.config import SHAPES
+    from repro.configs import ARCHS
+
+    archs = ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            rec = analyze_cell(arch, shape, args.mesh == "multi")
+            name = f"{arch}__{shape}__{rec.get('mesh','-')}.json"
+            with open(os.path.join(OUT_DIR, name), "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["status"] == "OK":
+                print(f"{arch:22s} {shape:12s} dom={rec['dominant']:10s} "
+                      f"comp={rec['compute_s']*1e3:9.2f}ms "
+                      f"mem={rec['memory_s']*1e3:9.2f}ms "
+                      f"coll={rec['collective_s']*1e3:9.2f}ms "
+                      f"useful={rec['useful_flops_ratio']:.2f} "
+                      f"({rec['analyze_s']}s)", flush=True)
+            else:
+                print(f"{arch:22s} {shape:12s} SKIP", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
+benchmark itself; derived = the headline metric checked against the paper).
+
+  PYTHONPATH=src python -m benchmarks.run            # paper suite
+  PYTHONPATH=src python -m benchmarks.run --live     # + live-host profiling
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from benchmarks import paper_tables as pt  # noqa: E402
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    rows, derived = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    return us, derived
+
+
+BENCHES = [
+    ("table2_size_runtime", pt.table2_size_runtime),
+    ("tables3to6_container_profiles", pt.tables3to6_container_profiles),
+    ("fig5_50images", pt.fig5_50images),
+    ("fig6_1000images", pt.fig6_1000images),
+    ("fig7_cpu_load", pt.fig7_cpu_load),
+    ("fig8_scaleout", pt.fig8_scaleout),
+    ("beyond_policies", pt.beyond_policies),
+    ("staleness_sweep", pt.staleness_sweep),
+]
+
+
+def live_profile_bench():
+    """Measure a real jitted model step under thread contention on this host
+    (the live analogue of Tables V/VI)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core.profile import measure_profile
+    from repro.models import model as M
+
+    cfg = get_smoke_config("qwen3-4b")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    fwd = jax.jit(lambda p, t: M.forward(p, t, cfg)[0])
+
+    def step(size):
+        t = jnp.ones((1, int(size)), jnp.int32)
+        fwd(params, t).block_until_ready()
+
+    prof = measure_profile("lm_step", step, sizes=(16, 32, 64),
+                           concurrencies=(1, 2, 4), reps=2)
+    rows = [{"size": s, "ms": round(m, 2)}
+            for s, m in zip(prof.size_curve.xs, prof.size_curve.ys)]
+    mono = all(a <= b * 1.5 for a, b in zip(prof.size_curve.ys,
+                                            prof.size_curve.ys[1:]))
+    return rows, (f"base={prof.base_ms:.1f}ms "
+                  f"contention4={prof.contention(4)/max(prof.contention(1),1e-9):.1f}x "
+                  f"size_monotoneish={mono}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--live", action="store_true",
+                    help="also run live-host profiling benches (slow)")
+    args, _ = ap.parse_known_args()
+
+    benches = list(BENCHES)
+    if args.live:
+        benches.append(("live_profile", live_profile_bench))
+
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        us, derived = _timed(fn)
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Elastic scale-out / failure handling with the live DDS fleet —
+the paper's Fig 8 ("add one more Raspberry Pi") plus the inverse (a node
+dies mid-stream and the fleet routes around it).
+
+  PYTHONPATH=src python examples/elastic_scaleout.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.latency import Task
+from repro.core.node import Worker
+from repro.core.policies import make_policy
+from repro.core.profile import FACE, paper_edge_server, paper_raspberry_pi
+from repro.core.scheduler import Fleet
+
+
+def work_fn(ms):
+    def fn(task):
+        time.sleep(ms / 1e3)
+        return task.task_id
+    return fn
+
+
+def submit_stream(fleet, n, start_id=0, constraint=400.0, interval_s=0.004):
+    done = []
+    for i in range(n):
+        t = Task(task_id=start_id + i, app_id=FACE, size_kb=29.0,
+                 created_ms=time.monotonic() * 1e3,
+                 constraint_ms=constraint, source="rasp1")
+        fleet.submit(t, on_done=done.append)
+        time.sleep(interval_s)
+    deadline = time.monotonic() + 10
+    while len(done) < n and time.monotonic() < deadline:
+        time.sleep(0.01)
+    return done
+
+
+def main():
+    fleet = Fleet(make_policy("DDS"), source="rasp1",
+                  coordinator="edge_server", heartbeat_ms=5,
+                  required_apps=[FACE])
+    fleet.add_worker(Worker(paper_raspberry_pi("rasp1", 2), {FACE: work_fn(30)}))
+    fleet.add_worker(Worker(paper_edge_server(4), {FACE: work_fn(10)}))
+    fleet.start()
+
+    print("--- phase 1: rasp1 + edge only ---")
+    d1 = submit_stream(fleet, 40)
+    met1 = sum(c.met for c in d1)
+    print(f"completed={len(d1)} met={met1} placements={fleet.stats.placements}")
+
+    print("--- phase 2: certify + join rasp2 (paper Fig 8 scale-out) ---")
+    w2 = Worker(paper_raspberry_pi("rasp2", 2), {FACE: work_fn(30)})
+    fleet.add_worker(w2)
+    w2.start()
+    fleet._publishers["rasp2"].start()
+    d2 = submit_stream(fleet, 40, start_id=100)
+    met2 = sum(c.met for c in d2)
+    print(f"completed={len(d2)} met={met2} placements={fleet.stats.placements}")
+
+    print("--- phase 3: rasp2 'fails' (removed); fleet degrades gracefully ---")
+    fleet.remove_worker("rasp2")
+    d3 = submit_stream(fleet, 20, start_id=200, constraint=2000.0)
+    print(f"completed={len(d3)} all routed to {sorted({c.node for c in d3})}")
+
+    fleet.stop()
+    print("\nelastic lifecycle OK: join -> serve -> leave, no lost tasks")
+
+
+if __name__ == "__main__":
+    main()

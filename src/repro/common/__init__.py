@@ -1,0 +1,13 @@
+from repro.common.config import (  # noqa: F401
+    ATTN,
+    CROSS,
+    GLOBAL,
+    LOCAL,
+    RGLRU,
+    SSM,
+    SHAPES,
+    ModelConfig,
+    ParallelConfig,
+    ShapeConfig,
+    TrainConfig,
+)

@@ -1,0 +1,63 @@
+"""Small pytree utilities used across the framework (no flax/optax here)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def tree_map(f: Callable, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_count(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_paths(tree):
+    """[(path_str, leaf)] with '/'-joined dict keys."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-5) -> bool:
+    oks = jax.tree.map(
+        lambda x, y: bool(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)),
+        a,
+        b,
+    )
+    return all(jax.tree.leaves(oks))

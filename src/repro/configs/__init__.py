@@ -1,0 +1,57 @@
+"""Registry of assigned architectures (+ their reduced smoke configs)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.common.config import ModelConfig
+
+ARCHS: List[str] = [
+    "mamba2_780m",
+    "granite_8b",
+    "qwen3_4b",
+    "minicpm_2b",
+    "gemma3_27b",
+    "mixtral_8x22b",
+    "arctic_480b",
+    "musicgen_medium",
+    "llama32_vision_90b",
+    "recurrentgemma_9b",
+]
+
+# public ids (dashes) <-> module names (underscores)
+def canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "")
+
+
+_ALIASES = {
+    "mamba2-780m": "mamba2_780m",
+    "granite-8b": "granite_8b",
+    "qwen3-4b": "qwen3_4b",
+    "minicpm-2b": "minicpm_2b",
+    "gemma3-27b": "gemma3_27b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "arctic-480b": "arctic_480b",
+    "musicgen-medium": "musicgen_medium",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+
+def _module(name: str):
+    mod = _ALIASES.get(name, canon(name))
+    if mod not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ALIASES)}")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: importlib.import_module(f"repro.configs.{a}").config() for a in ARCHS}

@@ -1,0 +1,15 @@
+"""The paper's contribution: dynamic distributed scheduling (DDS)."""
+from repro.core.admission import admit, min_feasible_ms               # noqa: F401
+from repro.core.latency import (NodeState, Task, predict_process_ms,  # noqa: F401
+                                predict_queue_ms, predict_total_ms, slack_ms)
+from repro.core.node import Completion, Worker, certify               # noqa: F401
+from repro.core.policies import (AOE, AOR, DDS, DDS_EDF, DDS_P2C,     # noqa: F401
+                                 EODS, JSQ, NodeView, Policy, make_policy)
+from repro.core.profile import (AppProfile, Curve, DeviceProfile,     # noqa: F401
+                                FACE, LinkProfile, measure_profile,
+                                paper_edge_server, paper_raspberry_pi)
+from repro.core.scheduler import Fleet, FleetStats                    # noqa: F401
+from repro.core.simulator import (SimConfig, SimResult, Simulator,    # noqa: F401
+                                  TaskRecord, run_sim)
+from repro.core.telemetry import (MaintainProfileTable,               # noqa: F401
+                                  UpdateProfilePublisher)

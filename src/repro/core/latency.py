@@ -1,0 +1,77 @@
+"""The paper's task-latency model:
+
+    T_task(x, e) = T_trans(x, e) + T_que(x, e) + T_process(x, e) + T_re(x, es)
+
+Given a task, a device profile and the device's *currently known* state
+(possibly stale — by design), predict end-to-end latency.  Every scheduling
+policy routes through this single predictor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.profile import AppProfile, DeviceProfile
+
+
+@dataclass(frozen=True)
+class Task:
+    """One schedulable unit (paper: an image; fleet port: a request/step)."""
+
+    task_id: int
+    app_id: str
+    size_kb: float                 # input size (image KB / prompt tokens)
+    created_ms: float              # arrival time
+    constraint_ms: float           # deadline (end-to-end)
+    result_kb: float = 1.0         # result return size
+    source: str = ""               # node where the task originated
+
+
+@dataclass
+class NodeState:
+    """Dynamic state as known to a scheduler (may be stale)."""
+
+    running: int = 0               # tasks currently executing in warm slots
+    queued: int = 0                # tasks waiting for a slot
+    cpu_load: float = 0.0          # background load [0, 1]
+    updated_ms: float = 0.0        # telemetry timestamp
+
+
+def predict_process_ms(profile: DeviceProfile, task: Task,
+                       state: NodeState, extra: int = 1) -> float:
+    """T_process if the task were added now: concurrency = running + extra."""
+    app = profile.app(task.app_id)
+    conc = min(state.running + extra, profile.slots)
+    return app.process_time(task.size_kb, conc, state.cpu_load)
+
+
+def predict_queue_ms(profile: DeviceProfile, task: Task,
+                     state: NodeState) -> float:
+    """T_que: queued tasks drain through ``slots`` lanes at the contended
+    per-task rate.  The paper's predictor uses exactly this queue-depth x
+    profiled-time estimate (and flags its staleness risk)."""
+    if state.queued <= 0:
+        return 0.0
+    app = profile.app(task.app_id)
+    per_task = app.process_time(task.size_kb, min(profile.slots, max(
+        state.running, 1)), state.cpu_load)
+    waves = state.queued / max(profile.slots, 1)
+    return waves * per_task
+
+
+def predict_total_ms(profile: DeviceProfile, task: Task, state: NodeState,
+                     remote: bool) -> float:
+    """Full T_task.  ``remote``: include transfer + result-return terms."""
+    t = 0.0
+    if remote:
+        t += profile.link.transfer_time(task.size_kb)          # T_trans
+    t += predict_queue_ms(profile, task, state)                # T_que
+    t += predict_process_ms(profile, task, state)              # T_process
+    if remote:
+        t += profile.link.transfer_time(task.result_kb)        # T_re
+    return t
+
+
+def slack_ms(task: Task, now_ms: float) -> float:
+    """Remaining budget against the deadline."""
+    return task.constraint_ms - (now_ms - task.created_ms)

@@ -1,0 +1,153 @@
+"""The live two-level DDS runtime: real workers, real telemetry, any Policy.
+
+Level 1 (source node): decide locally with *exact* local state — zero
+scheduling communication when the local node can meet the deadline.
+Level 2 (coordinator): decide with the *stale* MP table view; prefer
+capable peers (keeps the coordinator light), else run on the coordinator.
+
+This is the same decision logic the simulator exercises, wired to live
+``Worker`` threads — and it is the router the serving engine
+(`repro.serving.engine`) plugs into.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.admission import admit
+from repro.core.latency import NodeState, Task
+from repro.core.network import Link
+from repro.core.node import Completion, Worker, certify
+from repro.core.policies import FORWARD, LOCAL, NodeView, Policy
+from repro.core.telemetry import MaintainProfileTable, UpdateProfilePublisher
+
+
+@dataclass
+class FleetStats:
+    submitted: int = 0
+    rejected: int = 0
+    lost: int = 0
+    placements: Dict[str, int] = field(default_factory=dict)
+
+
+class Fleet:
+    """A set of live workers under one coordinator + one source node."""
+
+    def __init__(self, policy: Policy, *, source: str, coordinator: str,
+                 heartbeat_ms: float = 20.0, admission_margin: float = 0.0,
+                 required_apps: Optional[List[str]] = None):
+        self.policy = policy
+        self.source_name = source
+        self.coordinator_name = coordinator
+        self.heartbeat_ms = heartbeat_ms
+        self.admission_margin = admission_margin
+        self.required_apps = required_apps or []
+        self.workers: Dict[str, Worker] = {}
+        self.links: Dict[str, Link] = {}
+        self.table = MaintainProfileTable()
+        self._publishers: Dict[str, UpdateProfilePublisher] = {}
+        self.stats = FleetStats()
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ lifecycle
+    def add_worker(self, worker: Worker, link: Optional[Link] = None) -> None:
+        """Certification handshake + join (paper: devices certified before
+        joining; fleet port: elastic scale-out entry point)."""
+        ok, why = certify(worker.profile, self.required_apps)
+        if not ok:
+            raise ValueError(f"certification failed for {worker.name}: {why}")
+        self.workers[worker.name] = worker
+        self.links[worker.name] = link or Link(worker.profile.link)
+        pub = UpdateProfilePublisher(worker.name, worker.profile,
+                                     worker.state, self.table,
+                                     self.heartbeat_ms)
+        self._publishers[worker.name] = pub
+
+    def remove_worker(self, name: str) -> None:
+        """Elastic scale-in / failure handling: unregister and stop."""
+        pub = self._publishers.pop(name, None)
+        if pub:
+            pub.stop()
+        w = self.workers.pop(name, None)
+        if w:
+            w.stop()
+        self.table.remove(name)
+
+    def start(self) -> None:
+        for w in self.workers.values():
+            w.start()
+        for p in self._publishers.values():
+            p.start()
+
+    def stop(self) -> None:
+        for p in self._publishers.values():
+            p.stop()
+        for w in self.workers.values():
+            w.stop()
+
+    # ------------------------------------------------------------- routing
+    def _view(self, name: str, exact: bool) -> NodeView:
+        w = self.workers[name]
+        if exact:
+            state = w.state()
+        else:
+            rec = self.table.get(name)
+            state = rec.state if rec else NodeState()
+        free = max(w.profile.slots - state.running - state.queued, 0)
+        return NodeView(profile=w.profile, state=state, free_slots=free)
+
+    def submit(self, task: Task,
+               on_done: Optional[Callable[[Completion], None]] = None) -> bool:
+        """Route one task through the two-level scheduler."""
+        now = time.monotonic() * 1e3
+        with self._lock:
+            self.stats.submitted += 1
+        if self.admission_margin > 0:
+            fleet_profiles = {n: w.profile for n, w in self.workers.items()}
+            ok, _ = admit(fleet_profiles, task, self.source_name,
+                          self.admission_margin)
+            if not ok:
+                with self._lock:
+                    self.stats.rejected += 1
+                return False
+
+        # level 1: source-local decision on exact local state
+        decision = self.policy.decide_source(
+            task, now, self._view(self.source_name, exact=True))
+        if decision == LOCAL:
+            return self._place(task, self.source_name, on_done, local=True)
+
+        # forward to coordinator (over the source->coordinator link)
+        if not self.links[self.coordinator_name].send(task.size_kb):
+            with self._lock:
+                self.stats.lost += 1               # UDP-style loss
+            return False
+
+        # level 2: coordinator decision on (stale) MP table views
+        peers = {n: self._view(n, exact=False) for n in self.workers
+                 if n not in (self.coordinator_name, task.source)}
+        coord_view = self._view(self.coordinator_name, exact=True)
+        target = self.policy.decide_coordinator(task, now, coord_view, peers)
+        if target != self.coordinator_name:
+            if not self.links[target].send(task.size_kb):
+                with self._lock:
+                    self.stats.lost += 1
+                return False
+        return self._place(task, target, on_done, local=False)
+
+    def _place(self, task, name, on_done, local: bool) -> bool:
+        ok = self.workers[name].submit(task, on_done)
+        if ok:
+            with self._lock:
+                self.stats.placements[name] = \
+                    self.stats.placements.get(name, 0) + 1
+        return ok
+
+    # ------------------------------------------------------------- results
+    def drain_completions(self) -> List[Completion]:
+        out: List[Completion] = []
+        for w in self.workers.values():
+            out.extend(w.drain_completions())
+        return out

@@ -1,0 +1,239 @@
+"""Discrete-event simulator of the paper's two-level edge architecture.
+
+Faithfully models the evaluation setup of Section V:
+
+  camera -> Rasp1 (source; local decision) --WiFi--> edge server (coordinator;
+  global decision over stale heartbeat views) --WiFi--> Rasp2 (peer)
+
+  * warm-container slots per node (Table V/VI contention applies at start),
+  * FIFO (or EDF) per-node waiting queues (the paper's q_image),
+  * Update-Profile heartbeats: the coordinator sees peer state that is up to
+    ``heartbeat_ms`` stale (paper: 20 ms) — decisions tolerate staleness,
+  * UDP-style message loss on links (paper sends requests over UDP),
+  * background CPU load on the coordinator (Fig 7/8 stress parameter).
+
+Deterministic given the config (loss draws use a seeded RNG).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.latency import NodeState, Task
+from repro.core.policies import FORWARD, LOCAL, NodeView, Policy
+from repro.core.profile import (FACE, DeviceProfile, paper_edge_server,
+                                paper_raspberry_pi)
+
+
+@dataclass
+class SimConfig:
+    num_tasks: int = 50
+    interval_ms: float = 50.0
+    constraint_ms: float = 1000.0
+    image_kb: float = 29.0
+    result_kb: float = 1.0
+    heartbeat_ms: float = 20.0
+    edge_cpu_load: float = 0.0
+    include_rasp2: bool = True
+    edge_slots: int = 8
+    rpi_slots: int = 4
+    seed: int = 0
+    loss_prob: float = 0.0
+
+
+@dataclass
+class TaskRecord:
+    task: Task
+    finished_ms: float = float("inf")
+    node: str = ""
+    dropped: bool = False
+
+    @property
+    def latency_ms(self) -> float:
+        return self.finished_ms - self.task.created_ms
+
+    @property
+    def met(self) -> bool:
+        return self.latency_ms <= self.task.constraint_ms
+
+
+@dataclass
+class SimResult:
+    policy: str
+    config: SimConfig
+    records: List[TaskRecord]
+
+    @property
+    def num_met(self) -> int:
+        return sum(1 for r in self.records if r.met)
+
+    @property
+    def latencies(self) -> List[float]:
+        return [r.latency_ms for r in self.records if r.finished_ms < float("inf")]
+
+    def placement_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.records:
+            out[r.node] = out.get(r.node, 0) + 1
+        return out
+
+
+class _SimNode:
+    def __init__(self, profile: DeviceProfile):
+        self.profile = profile
+        self.name = profile.device_id
+        self.running = 0
+        self.waiting: deque = deque()        # (task, enqueue_time)
+        self.cpu_load = profile.cpu_load
+
+    @property
+    def free_slots(self) -> int:
+        return self.profile.slots - self.running
+
+    def exact_state(self, now: float) -> NodeState:
+        return NodeState(running=self.running, queued=len(self.waiting),
+                         cpu_load=self.cpu_load, updated_ms=now)
+
+    def view(self, state: NodeState) -> NodeView:
+        free = max(self.profile.slots - state.running - state.queued, 0)
+        return NodeView(profile=self.profile, state=state, free_slots=free)
+
+
+class Simulator:
+    """Event-driven executor for one (policy, config) run."""
+
+    def __init__(self, policy: Policy, config: SimConfig,
+                 fleet: Optional[Dict[str, DeviceProfile]] = None,
+                 source: str = "rasp1", coordinator: str = "edge_server"):
+        self.policy = policy
+        self.cfg = config
+        self.rng = random.Random(config.seed)
+        if fleet is None:
+            fleet = {"rasp1": paper_raspberry_pi("rasp1", config.rpi_slots),
+                     "edge_server": paper_edge_server(config.edge_slots)}
+            if config.include_rasp2:
+                fleet["rasp2"] = paper_raspberry_pi("rasp2", config.rpi_slots)
+        self.nodes = {n: _SimNode(p) for n, p in fleet.items()}
+        self.nodes[coordinator].cpu_load = config.edge_cpu_load
+        self.source = source
+        self.coordinator = coordinator
+        # coordinator's stale views of all peers (telemetry table)
+        self._hb_views: Dict[str, NodeState] = {
+            n: node.exact_state(0.0) for n, node in self.nodes.items()}
+        self._events: List = []
+        self._seq = itertools.count()
+        self.records: Dict[int, TaskRecord] = {}
+        self._n_done = 0
+
+    # ----------------------------------------------------------- event loop
+    def _push(self, when: float, fn: Callable, *args) -> None:
+        heapq.heappush(self._events, (when, next(self._seq), fn, args))
+
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        for i in range(cfg.num_tasks):
+            t_arrive = i * cfg.interval_ms
+            task = Task(task_id=i, app_id=FACE, size_kb=cfg.image_kb,
+                        created_ms=t_arrive, constraint_ms=cfg.constraint_ms,
+                        result_kb=cfg.result_kb, source=self.source)
+            self.records[i] = TaskRecord(task=task, node="")
+            self._push(t_arrive, self._on_task_at_source, task)
+        self._push(cfg.heartbeat_ms, self._on_heartbeat)
+
+        horizon = cfg.num_tasks * cfg.interval_ms + 100 * cfg.constraint_ms + 1e7
+        while self._events:
+            when, _, fn, args = heapq.heappop(self._events)
+            if when > horizon:
+                break
+            self._now = when
+            fn(when, *args)
+        return SimResult(self.policy.name, cfg, [self.records[i]
+                                                 for i in sorted(self.records)])
+
+    # ------------------------------------------------------------ telemetry
+    def _on_heartbeat(self, now: float) -> None:
+        for n, node in self.nodes.items():
+            self._hb_views[n] = node.exact_state(now)
+        if self._n_done < self.cfg.num_tasks:
+            self._push(now + self.cfg.heartbeat_ms, self._on_heartbeat)
+
+    # ------------------------------------------------------------- decisions
+    def _on_task_at_source(self, now: float, task: Task) -> None:
+        src = self.nodes[self.source]
+        decision = self.policy.decide_source(task, now, src.view(src.exact_state(now)))
+        if decision == LOCAL:
+            self._enqueue(now, self.source, task)
+        else:
+            self._transfer(now, task, self.source, self.coordinator,
+                           task.size_kb, self._on_task_at_coordinator)
+
+    def _on_task_at_coordinator(self, now: float, task: Task) -> None:
+        coord = self.nodes[self.coordinator]
+        peers = {n: self.nodes[n].view(self._hb_views[n])
+                 for n in self.nodes if n not in (self.coordinator, task.source)}
+        target = self.policy.decide_coordinator(
+            task, now, coord.view(coord.exact_state(now)), peers)
+        if target == self.coordinator:
+            self._enqueue(now, target, task)
+        else:
+            self._transfer(now, task, self.coordinator, target,
+                           task.size_kb, lambda t, tk: self._enqueue(t, target, tk))
+
+    # -------------------------------------------------------------- network
+    def _transfer(self, now: float, task: Task, src: str, dst: str,
+                  size_kb: float, then: Callable) -> None:
+        link = self.nodes[dst].profile.link
+        if self.cfg.loss_prob and self.rng.random() < self.cfg.loss_prob:
+            self.records[task.task_id].dropped = True      # UDP loss
+            return
+        self._push(now + link.transfer_time(size_kb), then, task)
+
+    # ------------------------------------------------------------ execution
+    def _enqueue(self, now: float, node_name: str, task: Task) -> None:
+        node = self.nodes[node_name]
+        self.records[task.task_id].node = node_name
+        if node.free_slots > 0:
+            self._start(now, node_name, task)
+        else:
+            node.waiting.append((task, now))
+            if self.policy.queue_discipline == "edf":
+                node.waiting = deque(sorted(
+                    node.waiting,
+                    key=lambda it: it[0].created_ms + it[0].constraint_ms))
+
+    def _start(self, now: float, node_name: str, task: Task) -> None:
+        node = self.nodes[node_name]
+        node.running += 1
+        app = node.profile.app(task.app_id)
+        proc = app.process_time(task.size_kb, node.running, node.cpu_load)
+        self._push(now + proc, self._finish, node_name, task)
+
+    def _finish(self, now: float, node_name: str, task: Task) -> None:
+        node = self.nodes[node_name]
+        node.running -= 1
+        self._n_done += 1
+        rec = self.records[task.task_id]
+        if node_name == task.source:
+            rec.finished_ms = now
+        else:
+            # result returns to the source over the link (T_re)
+            rec.finished_ms = now + node.profile.link.transfer_time(task.result_kb)
+        # pull next waiting task (container goes back to the q queue)
+        while node.waiting:
+            nxt, enq = node.waiting.popleft()
+            if self.policy.drop_late and \
+               now - nxt.created_ms > nxt.constraint_ms:
+                # shed late work — account it as dropped, not lost
+                self.records[nxt.task_id].dropped = True
+                self._n_done += 1
+                continue
+            self._start(now, node_name, nxt)
+            break
+
+
+def run_sim(policy: Policy, config: SimConfig, **kw) -> SimResult:
+    return Simulator(policy, config, **kw).run()

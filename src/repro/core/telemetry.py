@@ -1,0 +1,97 @@
+"""Update-Profile / Maintain-Profile — the paper's telemetry loop.
+
+Every node runs an Update-Profile (UP) publisher; the coordinator's
+Maintain-Profile (MP) table holds the last-received state per node.  The
+coordinator never blocks on fresh state: decisions read whatever is in the
+table (the paper's staleness-tolerant design, 20 ms period).
+
+The same loop doubles as the training fleet's heartbeat/straggler feed
+(``repro.ft``): a worker that stops publishing or whose step-time EWMA
+drifts is flagged.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.latency import NodeState
+from repro.core.profile import DeviceProfile
+
+
+@dataclass
+class HeartbeatRecord:
+    state: NodeState
+    profile: DeviceProfile
+    received_at: float
+
+
+class MaintainProfileTable:
+    """Coordinator-side global profile table (MP)."""
+
+    def __init__(self, staleness_alarm_ms: float = 1000.0):
+        self._table: Dict[str, HeartbeatRecord] = {}
+        self._lock = threading.Lock()
+        self.staleness_alarm_ms = staleness_alarm_ms
+
+    def update(self, name: str, state: NodeState,
+               profile: DeviceProfile) -> None:
+        with self._lock:
+            self._table[name] = HeartbeatRecord(state, profile,
+                                                time.monotonic() * 1e3)
+
+    def snapshot(self) -> Dict[str, HeartbeatRecord]:
+        with self._lock:
+            return dict(self._table)
+
+    def get(self, name: str) -> Optional[HeartbeatRecord]:
+        with self._lock:
+            return self._table.get(name)
+
+    def remove(self, name: str) -> None:
+        with self._lock:
+            self._table.pop(name, None)
+
+    def stale_nodes(self, now_ms: Optional[float] = None) -> List[str]:
+        """Nodes whose last heartbeat exceeds the alarm threshold —
+        candidates for failure handling / straggler mitigation."""
+        now_ms = now_ms if now_ms is not None else time.monotonic() * 1e3
+        with self._lock:
+            return [n for n, r in self._table.items()
+                    if now_ms - r.received_at > self.staleness_alarm_ms]
+
+
+class UpdateProfilePublisher:
+    """Node-side periodic state publisher (UP).  ``state_fn`` samples the
+    node's live counters; publishing runs on a daemon thread."""
+
+    def __init__(self, name: str, profile: DeviceProfile,
+                 state_fn: Callable[[], NodeState],
+                 table: MaintainProfileTable, period_ms: float = 20.0):
+        self.name = name
+        self.profile = profile
+        self.state_fn = state_fn
+        self.table = table
+        self.period_ms = period_ms
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def publish_once(self) -> None:
+        self.table.update(self.name, self.state_fn(), self.profile)
+
+    def start(self) -> None:
+        self.publish_once()
+
+        def loop():
+            while not self._stop.wait(self.period_ms / 1e3):
+                self.publish_once()
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name=f"up-{self.name}")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)

@@ -1,0 +1,59 @@
+"""Elastic rescale: move a training run between fleet sizes.
+
+The checkpoint is mesh-agnostic (host numpy); rescaling = rebuild the mesh
+with the surviving chip count, regenerate sharding specs, and
+``device_put`` every array with its new sharding.  Data-pipeline state is a
+step counter, so the stream continues exactly where it stopped; the batch
+is re-split over the new data-parallel ways.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.common.config import ModelConfig, ParallelConfig
+
+
+@dataclass
+class RescalePlan:
+    old_devices: int
+    new_devices: int
+    new_dp: int
+    new_tp: int
+    reason: str = ""
+
+    @property
+    def shrink(self) -> bool:
+        return self.new_devices < self.old_devices
+
+
+def plan_rescale(old: ParallelConfig, available_devices: int,
+                 min_tp: int = 1, reason: str = "") -> RescalePlan:
+    """Choose a new (dp, tp) for the surviving device count.
+
+    Keeps tp if it still divides the device count (weights keep their TP
+    layout => cheapest reshard); otherwise falls back to the largest
+    power-of-two tp <= old tp that fits."""
+    old_devices = old.dp * old.tp * old.pods
+    tp = old.tp
+    while tp > min_tp and available_devices % tp:
+        tp //= 2
+    dp = max(available_devices // tp, 1)
+    return RescalePlan(old_devices, dp * tp, dp, tp, reason)
+
+
+def reshard_state(state, mesh, spec_fn: Callable[[str], Any]):
+    """device_put every leaf with its sharding for the (new) mesh."""
+    from jax.sharding import NamedSharding
+
+    def put(path, x):
+        spec = spec_fn(path)
+        return jax.device_put(np.asarray(x), NamedSharding(mesh, spec))
+
+    from repro.common.tree import tree_paths
+    flat = tree_paths(state)
+    leaves = [put(p, x) for p, x in flat]
+    return jax.tree.unflatten(jax.tree.structure(state), leaves)

@@ -1,0 +1,111 @@
+"""Fault tolerance: heartbeats, straggler detection, failure handling.
+
+This is the paper's UP/MP telemetry loop applied to a training fleet:
+workers publish step latencies; the monitor keeps per-worker EWMA/variance
+and flags (a) **stragglers** — step time drifting beyond a z-score threshold
+of the fleet median — and (b) **dead workers** — heartbeat silence past the
+alarm window.  The driver responds by re-balancing (DDS re-placement) or by
+triggering an elastic rescale from the last checkpoint.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.telemetry import MaintainProfileTable
+
+
+@dataclass
+class WorkerStepStats:
+    ewma_ms: float = 0.0
+    var_ms: float = 0.0
+    count: int = 0
+    last_seen_ms: float = 0.0
+
+    def observe(self, step_ms: float, alpha: float = 0.2) -> None:
+        if self.count == 0:
+            self.ewma_ms = step_ms
+        delta = step_ms - self.ewma_ms
+        self.ewma_ms += alpha * delta
+        self.var_ms = (1 - alpha) * (self.var_ms + alpha * delta * delta)
+        self.count += 1
+        self.last_seen_ms = time.monotonic() * 1e3
+
+
+@dataclass
+class FleetHealth:
+    stragglers: List[str]
+    dead: List[str]
+    median_ms: float
+
+
+class StragglerMonitor:
+    """Step-time EWMA z-score straggler detection over the fleet."""
+
+    def __init__(self, z_threshold: float = 3.0, rel_threshold: float = 1.5,
+                 dead_after_ms: float = 5_000.0, min_steps: int = 3):
+        self.z = z_threshold
+        self.rel = rel_threshold
+        self.dead_after_ms = dead_after_ms
+        self.min_steps = min_steps
+        self.stats: Dict[str, WorkerStepStats] = {}
+        self._lock = threading.Lock()
+
+    def observe(self, worker: str, step_ms: float) -> None:
+        with self._lock:
+            self.stats.setdefault(worker, WorkerStepStats()).observe(step_ms)
+
+    def health(self, now_ms: Optional[float] = None) -> FleetHealth:
+        now_ms = now_ms if now_ms is not None else time.monotonic() * 1e3
+        with self._lock:
+            items = {k: v for k, v in self.stats.items()
+                     if v.count >= self.min_steps}
+            if not items:
+                return FleetHealth([], [], 0.0)
+            ewmas = sorted(v.ewma_ms for v in items.values())
+            median = ewmas[len(ewmas) // 2]
+            stragglers, dead = [], []
+            for name, st in items.items():
+                if now_ms - st.last_seen_ms > self.dead_after_ms:
+                    dead.append(name)
+                    continue
+                sd = math.sqrt(max(st.var_ms, 1e-9))
+                zscore = (st.ewma_ms - median) / max(sd, 1e-6)
+                if st.ewma_ms > self.rel * median and zscore > self.z:
+                    stragglers.append(name)
+            return FleetHealth(sorted(stragglers), sorted(dead), median)
+
+
+@dataclass
+class FailureEvent:
+    worker: str
+    at_step: int
+    kind: str          # "dead" | "straggler"
+
+
+class RecoveryPlan:
+    """Maps a health report to actions the driver executes:
+       - dead worker     -> drop from mesh, elastic rescale from checkpoint
+       - straggler       -> deprioritize in DDS placement (weight its
+                            profile's contention curve up), keep in mesh."""
+
+    def __init__(self, monitor: StragglerMonitor,
+                 table: Optional[MaintainProfileTable] = None):
+        self.monitor = monitor
+        self.table = table
+        self.events: List[FailureEvent] = []
+
+    def actions(self, step: int) -> Dict[str, List[str]]:
+        h = self.monitor.health()
+        if self.table is not None:
+            for name in self.table.stale_nodes():
+                if name not in h.dead:
+                    h.dead.append(name)
+        for w in h.dead:
+            self.events.append(FailureEvent(w, step, "dead"))
+        for w in h.stragglers:
+            self.events.append(FailureEvent(w, step, "straggler"))
+        return {"rescale_without": h.dead, "deprioritize": h.stragglers}

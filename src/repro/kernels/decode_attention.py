@@ -1,0 +1,114 @@
+"""Pallas TPU decode attention (flash-decode over a KV cache).
+
+Decode is memory-bound: one query token must stream the whole KV cache
+HBM->VMEM once.  Design:
+  * grid = (batch, kv_heads, kv_blocks); kv_blocks is ``arbitrary``
+    (sequential) so (m, l, acc) scratch accumulates while Mosaic pipelines
+    the next KV tile's DMA behind the current tile's FLOPs — the streaming
+    overlap IS the optimization at arithmetic intensity ~1.
+  * All q heads of one kv group (GQA) are processed together as the MXU's
+    M dimension: q tile is (q_per_kv, d), so granite's 4 q-heads/kv-head
+    share each streamed KV tile.
+  * cache_len / sliding-window masking via iota compare against the
+    (dynamic) current length.
+
+Validated on CPU with ``interpret=True`` against ``ref.decode_mha_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, window, softcap, block_k, num_kv_blocks):
+    ki = pl.program_id(2)
+    cache_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)          # (q_per_kv, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (block_k, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < cache_len
+    if window > 0:
+        mask &= kpos > cache_len - 1 - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _done():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, cache_len, window=0, scale=None,
+                     softcap=0.0, block_k=256, interpret=False):
+    """q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D) -> (B, 1, Hq, D)."""
+    b, _, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    block_k = min(block_k, smax)
+    t_pad = -smax % block_k
+    if t_pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    nk = (smax + t_pad) // block_k
+
+    # (B, 1, Hq, D) -> (B, Hkv, rep, D): group q heads by kv head
+    qg = q[:, 0].reshape(b, hkv, rep, d)
+    cache_len_arr = jnp.asarray(cache_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, softcap=softcap,
+        block_k=block_k, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # cache_len scalar
+            pl.BlockSpec((1, 1, rep, d), lambda b_, h, ki: (b_, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h, ki: (b_, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h, ki: (b_, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d), lambda b_, h, ki: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(cache_len_arr, qg, k_cache, v_cache)
+    return out.reshape(b, 1, hq, d)

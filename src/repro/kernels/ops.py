@@ -1,0 +1,88 @@
+"""Public jitted kernel entry points with backend dispatch.
+
+On TPU backends the Pallas kernels are used; everywhere else (CPU tests,
+host-platform multi-pod dry-run) the linear-memory jnp formulations from
+``ref.py`` execute the same algorithm with shardable einsums.
+
+Set ``REPRO_KERNEL_IMPL`` to force: ``pallas`` | ``pallas_interpret`` |
+``jnp``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _impl() -> str:
+    forced = os.environ.get("REPRO_KERNEL_IMPL", "")
+    if forced:
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# ------------------------------------------------------------------ attention
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    softcap=0.0, q_offset=0):
+    """(B,S,H,D) x (B,T,Hkv,D) -> (B,S,H,D)."""
+    impl = _impl()
+    if impl.startswith("pallas") and q.shape[1] > 1:
+        from repro.kernels import flash_attention as fk
+        return fk.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            softcap=softcap, q_offset=q_offset,
+            interpret=impl == "pallas_interpret")
+    if q.shape[1] * k.shape[1] <= 512 * 512:
+        return ref.mha_reference(q, k, v, causal=causal, window=window,
+                                 scale=scale, softcap=softcap, q_offset=q_offset)
+    return ref.mha_chunked(q, k, v, causal=causal, window=window,
+                           scale=scale, softcap=softcap, q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, *, cache_len, window=0, scale=None,
+                     softcap=0.0):
+    """(B,1,H,D) + (B,Smax,Hkv,D) caches -> (B,1,H,D)."""
+    impl = _impl()
+    if impl.startswith("pallas"):
+        from repro.kernels import decode_attention as dk
+        return dk.decode_attention(
+            q, k_cache, v_cache, cache_len=cache_len, window=window,
+            scale=scale, softcap=softcap,
+            interpret=impl == "pallas_interpret")
+    return ref.decode_mha_reference(q, k_cache, v_cache, cache_len=cache_len,
+                                    window=window, scale=scale, softcap=softcap)
+
+
+# ------------------------------------------------------------------------ SSD
+def ssd(x, dt, a_log, b_mat, c_mat, d_skip=None, chunk=128):
+    impl = _impl()
+    if impl.startswith("pallas"):
+        from repro.kernels import ssd_scan as sk
+        return sk.ssd(x, dt, a_log, b_mat, c_mat, d_skip, chunk=chunk,
+                      interpret=impl == "pallas_interpret")
+    return ref.ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk=chunk)
+
+
+ssd_decode_step = ref.ssd_decode_step
+
+
+# --------------------------------------------------------------------- RG-LRU
+def rglru(x, log_a, gate_x):
+    impl = _impl()
+    if impl.startswith("pallas"):
+        from repro.kernels import rglru_scan as rk
+        return rk.rglru(x, log_a, gate_x,
+                        interpret=impl == "pallas_interpret")
+    return ref.rglru_chunked(x, log_a, gate_x)
+
+
+rglru_decode_step = ref.rglru_decode_step
+
+
+# ------------------------------------------------------------------ conv bits
+causal_conv1d = ref.causal_conv1d
+causal_conv1d_step = ref.causal_conv1d_step

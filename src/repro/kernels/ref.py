@@ -1,0 +1,354 @@
+"""Pure-jnp oracles for every Pallas kernel, plus production jnp fallbacks.
+
+Two tiers per op:
+  * ``*_reference``   — simplest possible math, used as the test oracle.
+  * ``*_chunked``     — linear-memory formulation mirroring the Pallas kernel
+                        algorithm; used as the CPU / host-dry-run execution
+                        path so compiled memory stays honest at 32k–500k
+                        sequence lengths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# =============================================================== attention ref
+def _gqa_expand(k, num_q_heads):
+    """(B, T, Hkv, D) -> (B, T, Hq, D) by repeating kv heads."""
+    b, t, hkv, d = k.shape
+    rep = num_q_heads // hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _attn_mask(q_len, kv_len, causal: bool, window: int, q_offset=0):
+    """(q_len, kv_len) boolean mask. True = attend."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    m = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        m &= kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m
+
+
+def mha_reference(q, k, v, *, causal=True, window=0, scale=None, softcap=0.0,
+                  q_offset=0):
+    """q: (B,S,Hq,D); k,v: (B,T,Hkv,D) -> (B,S,Hq,D).  Full softmax oracle."""
+    b, s, hq, d = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k, hq)
+    v = _gqa_expand(v, hq)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = _attn_mask(s, t, causal, window, q_offset)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_mha_reference(q, k_cache, v_cache, *, cache_len, window=0,
+                         scale=None, softcap=0.0):
+    """q: (B,1,Hq,D); caches: (B,Smax,Hkv,D). Mask = [cache_len-window, cache_len)."""
+    b, _, hq, d = q.shape
+    smax = k_cache.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k_cache, hq)
+    v = _gqa_expand(v_cache, hq)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    j = jnp.arange(smax)
+    m = j < cache_len
+    if window > 0:
+        m &= j > cache_len - 1 - window
+    logits = jnp.where(m[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_mha_masked(q, k_cache, v_cache, *, valid_mask, scale=None,
+                      softcap=0.0):
+    """Decode attention over a ring-buffer cache: attend to slots where
+    ``valid_mask`` ((Smax,) bool) is set.  Keys are stored pre-roped at their
+    absolute positions so slot order is irrelevant.
+
+    The cache is consumed in its storage dtype (bf16) with f32 MXU
+    accumulation (preferred_element_type) — upcasting the cache itself would
+    double both its HBM traffic and any resharding collective (§Perf iter 2).
+    """
+    b, _, hq, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k_cache, hq)
+    v = _gqa_expand(v_cache, hq)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(valid_mask[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ========================================================== attention chunked
+def mha_chunked(q, k, v, *, causal=True, window=0, scale=None, softcap=0.0,
+                q_block=512, kv_block=1024, q_offset=0):
+    """Online-softmax attention in pure jnp: O(S·block) memory.
+
+    Mirrors the Pallas flash kernel: for each q block, scan kv blocks with
+    running (max, sum, acc) accumulators.  This is the production CPU /
+    GSPMD path — all ops are plain einsums + elementwise, so the partitioner
+    can shard batch/heads/sequence freely.
+    """
+    b, s, hq, d = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k, hq)
+    v = _gqa_expand(v, hq)
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, t)
+    # pad to block multiples
+    s_pad = -s % q_block
+    t_pad = -t % kv_block
+    qp = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    nq, nk = (s + s_pad) // q_block, (t + t_pad) // kv_block
+    qb = qp.reshape(b, nq, q_block, hq, d).astype(jnp.float32)
+    kb = kp.reshape(b, nk, kv_block, hq, d).astype(jnp.float32)
+    vb = vp.reshape(b, nk, kv_block, hq, d).astype(jnp.float32)
+
+    qi_base = jnp.arange(q_block)
+    kj_base = jnp.arange(kv_block)
+
+    def q_step(qi, q_i):
+        # q_i: (B, q_block, H, D)
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            kj, k_j, v_j = inp
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j) * scale
+            if softcap:
+                logits = softcap * jnp.tanh(logits / softcap)
+            qpos = qi * q_block + qi_base[:, None] + q_offset
+            kpos = kj * kv_block + kj_base[None, :]
+            mask = (kpos < t)
+            if causal:
+                mask &= kpos <= qpos
+            if window > 0:
+                mask &= kpos > qpos - window
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, v_j)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hq, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hq, q_block, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb.transpose(1, 0, 2, 3, 4),
+                                    vb.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3)  # (B, q_block, H, D)
+
+    outs = jax.lax.map(lambda args: q_step(*args),
+                       (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_block, hq, d)
+    return out[:, :s].astype(q.dtype)
+
+
+# ===================================================================== SSD ref
+def segsum(log_a):
+    """(..., S) -> (..., S, S) lower-triangular cumulative log-decay:
+    out[i, j] = sum_{r=j+1..i} log_a[r]   (i >= j), -inf above diagonal."""
+    s = log_a.shape[-1]
+    cum = jnp.cumsum(log_a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(x, dt, a_log, b_mat, c_mat, d_skip=None):
+    """Mamba2 SSD oracle (quadratic — small shapes only).
+
+    x:     (B, S, H, P)   per-head inputs
+    dt:    (B, S, H)      post-softplus timestep
+    a_log: (H,)           A = -exp(a_log), per-head scalar
+    b_mat: (B, S, N)      input projection (n_groups = 1, broadcast to heads)
+    c_mat: (B, S, N)      output projection
+    d_skip:(H,) or None   skip connection
+    returns (B, S, H, P)
+    """
+    bsz, s, h, p = x.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (H,)
+    log_decay = dt.astype(jnp.float32) * a[None, None, :]       # (B,S,H)
+    ls = segsum(log_decay.transpose(0, 2, 1))                   # (B,H,S,S)
+    cb = jnp.einsum("bsn,btn->bst", c_mat.astype(jnp.float32),
+                    b_mat.astype(jnp.float32))                  # (B,S,T)
+    att = cb[:, None] * jnp.exp(ls)                             # (B,H,S,T)
+    xb = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bhst,bthp->bshp", att, xb)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip=None, chunk=128):
+    """Linear-time chunked SSD (state-space duality), mirroring the Pallas
+    kernel: intra-chunk quadratic term + inter-chunk state recurrence."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} % chunk {chunk}"
+    nc = s // chunk
+
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))
+    log_decay = (dt.astype(f32) * a[None, None, :]).reshape(bsz, nc, chunk, h)
+    xb = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(bsz, nc, chunk, h, p)
+    bm = b_mat.astype(f32).reshape(bsz, nc, chunk, n)
+    cm = c_mat.astype(f32).reshape(bsz, nc, chunk, n)
+
+    cum = jnp.cumsum(log_decay, axis=2)                        # (B,NC,Q,H)
+    total = cum[:, :, -1]                                      # (B,NC,H)
+
+    # ---- intra-chunk (quadratic within chunk)
+    ls = segsum(log_decay.transpose(0, 1, 3, 2))               # (B,NC,H,Q,Q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cm, bm)
+    att = cb[:, :, None] * jnp.exp(ls)                         # (B,NC,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", att, xb)
+
+    # ---- chunk states: S_c = sum_j exp(total - cum_j) B_j (x dt)_j
+    decay_to_end = jnp.exp(total[:, :, None] - cum)            # (B,NC,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bm, decay_to_end, xb)
+
+    # ---- inter-chunk recurrence over chunk axis
+    def step(h_prev, inp):
+        tot_c, s_c = inp                                       # (B,H), (B,H,N,P)
+        h_new = jnp.exp(tot_c)[..., None, None] * h_prev + s_c
+        return h_new, h_prev                                   # emit state BEFORE chunk
+
+    h0 = jnp.zeros((bsz, h, n, p), f32)
+    _, h_before = jax.lax.scan(
+        step, h0, (total.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)               # (B,NC,H,N,P)
+
+    # ---- inter-chunk output: y_i += C_i · exp(cum_i) h_before
+    decay_in = jnp.exp(cum)                                    # (B,NC,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cm, decay_in, h_before)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    if d_skip is not None:
+        y = y + d_skip.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(h_state, x_t, dt_t, a_log, b_t, c_t, d_skip=None):
+    """Single-token SSD recurrence step.
+
+    h_state: (B,H,N,P); x_t: (B,H,P); dt_t: (B,H); b_t/c_t: (B,N)
+    returns (y_t (B,H,P), h_new)."""
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))
+    decay = jnp.exp(dt_t.astype(f32) * a[None, :])            # (B,H)
+    xb = x_t.astype(f32) * dt_t.astype(f32)[..., None]        # (B,H,P)
+    h_new = decay[..., None, None] * h_state + jnp.einsum(
+        "bn,bhp->bhnp", b_t.astype(f32), xb)
+    y = jnp.einsum("bn,bhnp->bhp", c_t.astype(f32), h_new)
+    if d_skip is not None:
+        y = y + d_skip.astype(f32)[None, :, None] * x_t.astype(f32)
+    return y.astype(x_t.dtype), h_new
+
+
+# ================================================================== RG-LRU ref
+def rglru_reference(x, log_a, gate_x):
+    """RG-LRU oracle via step scan.
+
+    x:      (B, S, D)  pre-gated input
+    log_a:  (B, S, D)  log recurrence weight (<= 0)
+    gate_x: (B, S, D)  input gate (already sigmoided)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (gate_x_t * x_t)
+    """
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a.astype(f32)), 0.0))
+    bx = beta * gate_x.astype(f32) * x.astype(f32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros((x.shape[0], x.shape[2]), f32)
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), bx.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(x.dtype)
+
+
+def rglru_chunked(x, log_a, gate_x, chunk=256):
+    """Associative-scan RG-LRU (log-depth, linear memory): production path."""
+    f32 = jnp.float32
+    la = log_a.astype(f32)
+    a = jnp.exp(la)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * la), 0.0))
+    bx = beta * gate_x.astype(f32) * x.astype(f32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return b_s.astype(x.dtype)
+
+
+def rglru_decode_step(h_state, x_t, log_a_t, gate_x_t):
+    """h_state: (B,D); x_t/log_a_t/gate_x_t: (B,D) -> (y, h_new)."""
+    f32 = jnp.float32
+    la = log_a_t.astype(f32)
+    a = jnp.exp(la)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * la), 0.0))
+    h_new = a * h_state + beta * gate_x_t.astype(f32) * x_t.astype(f32)
+    return h_new.astype(x_t.dtype), h_new
+
+
+# ============================================================= causal conv1d
+def causal_conv1d(x, w, b=None):
+    """x: (B, S, D); w: (W, D) depthwise causal conv; returns (B, S, D)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_step(conv_state, x_t, w, b=None):
+    """conv_state: (B, W-1, D) past inputs; x_t: (B, D)."""
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, W, D)
+    out = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    new_state = window[:, 1:]
+    return out.astype(x_t.dtype), new_state

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) chunked scan.
+
+Algorithm per (batch, head), chunk Q=128, state N, head dim P:
+  intra-chunk:  y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xb_j
+                -> two MXU matmuls through a (Q x Q) decay-masked score
+  inter-chunk:  y_i += exp(cum_i) * C_i @ h_prev
+  state update: h    = exp(total) * h_prev + (B * exp(total - cum)).T @ xb
+
+TPU mapping: grid = (batch, heads, chunks) with the chunk dimension
+``arbitrary`` (sequential); the (N x P) running state lives in VMEM scratch
+and carries across chunk steps.  The (Q x Q) intra score and both state
+matmuls are MXU-shaped (Q = 128, N = 128, P = 64).  The elementwise decay
+math runs on the VPU in f32.
+
+Inputs are pre-mixed by the wrapper (ops.py): xb = x * dt, log-decay
+ld = dt * (-exp(a_log)) — keeping the kernel purely about the scan.
+Validated with ``interpret=True`` against ``ref.ssd_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xb_ref, ld_ref, b_ref, c_ref, y_ref, h_scr, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    xb = xb_ref[0, :, 0, :].astype(jnp.float32)     # (Q, P)
+    ld = ld_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    bm = b_ref[0, :, :].astype(jnp.float32)         # (Q, N)
+    cm = c_ref[0, :, :].astype(jnp.float32)         # (Q, N)
+
+    cum = jnp.cumsum(ld)                            # (Q,)
+    total = cum[-1]
+
+    # ---- intra-chunk: (Q,Q) decay-masked score through the MXU
+    seg = cum[:, None] - cum[None, :]               # cum_i - cum_j
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = iota_j <= iota_i
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    att = cb * decay
+    y = jax.lax.dot_general(att, xb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q,P)
+
+    # ---- inter-chunk: contribution of the carried state
+    h_prev = h_scr[...]                             # (N, P)
+    decay_in = jnp.exp(cum)[:, None]                # (Q, 1)
+    y = y + decay_in * jax.lax.dot_general(
+        cm, h_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # ---- state update
+    decay_out = jnp.exp(total - cum)[:, None]       # (Q, 1)
+    b_scaled = bm * decay_out                       # (Q, N)
+    h_scr[...] = jnp.exp(total) * h_prev + jax.lax.dot_general(
+        b_scaled, xb, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd(x, dt, a_log, b_mat, c_mat, d_skip=None, *, chunk=128, interpret=False):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); b_mat/c_mat: (B,S,N)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not a multiple of chunk {chunk}"
+    nc = s // chunk
+
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))
+    ld = dt.astype(f32) * a[None, None, :]                    # (B,S,H)
+    xb = (x.astype(f32) * dt.astype(f32)[..., None])          # (B,S,H,P)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xb, ld, b_mat, c_mat)
+
+    if d_skip is not None:
+        y = y + (d_skip.astype(f32)[None, None, :, None]
+                 * x.astype(f32)).astype(y.dtype)
+    return y

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first backend init).  Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * build the full-size config and ShapeDtypeStruct inputs (no allocation),
+  * jit with explicit in/out shardings on the production mesh,
+  * ``lower().compile()`` — success proves the distribution is coherent,
+  * record memory_analysis / cost_analysis / HLO collective bytes for the
+    roofline (written as JSON under experiments/dryrun/).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import (SHAPES, ModelConfig, ParallelConfig,
+                                 ShapeConfig, TrainConfig)
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh, parallel_config_for
+from repro.models import model as model_lib
+from repro.sharding import specs as sp
+from repro.training import steps as steps_lib
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# archs with unbounded full attention cannot serve a 500k context
+# (see DESIGN.md §4) — recorded as SKIP cells.
+LONG_CONTEXT_OK = {"mamba2-780m", "gemma3-27b", "mixtral-8x22b",
+                   "recurrentgemma-9b"}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    import jax.numpy as jnp
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch = {"tokens": sds((b, s, cfg.d_model), jnp.bfloat16)}
+        else:
+            batch = {"tokens": sds((b, s), jnp.int32)}
+        batch["labels"] = sds((b, s), jnp.int32)
+        batch["mask"] = sds((b, s), jnp.float32)
+        if cfg.family == "vlm":
+            batch["enc"] = sds((b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of seq_len capacity
+    if cfg.family == "audio":
+        tok = sds((b, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        tok = sds((b, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: model_lib.init_cache(cfg, b, s))
+    return {"tokens": tok, "cache": cache,
+            "cache_index": sds((), jnp.int32)}
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               pc: ParallelConfig):
+    """Returns (jitted_fn, example_args) ready to lower."""
+    num_groups = pc.data_ways
+    state_shapes = jax.eval_shape(
+        lambda: steps_lib.init_train_state(jax.random.PRNGKey(0), cfg))
+    param_specs = sp.state_specs(state_shapes, mesh, pc)
+    bspecs = sp.batch_specs(cfg, shape, mesh, pc)
+
+    if shape.kind == "train":
+        tc = TrainConfig(total_steps=1000)
+        inner = steps_lib.make_train_step(cfg, tc, num_groups=num_groups)
+
+        def train_step(state, batch):
+            from repro.sharding import context as shctx
+            with shctx.activation_mesh(mesh):     # §Perf iter 3
+                return inner(state, batch)
+
+        in_sh = (sp.named(mesh, param_specs),
+                 sp.named(mesh, {k: bspecs[k] for k in
+                                 input_specs(cfg, shape)}))
+        out_sh = (sp.named(mesh, param_specs), None)
+        fn = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh)
+        return fn, (state_shapes, input_specs(cfg, shape))
+
+    if shape.kind == "prefill":
+        def prefill_fwd(params, batch):
+            from repro.sharding import context as shctx
+            with shctx.activation_mesh(mesh):     # §Perf iter 3
+                logits, _ = model_lib.forward(params, batch["tokens"], cfg,
+                                              enc=batch.get("enc"),
+                                              num_groups=num_groups)
+            return logits
+        batch = input_specs(cfg, shape)
+        batch.pop("labels"), batch.pop("mask")
+        pspecs = param_specs["params"]
+        in_sh = (sp.named(mesh, pspecs),
+                 sp.named(mesh, {k: bspecs[k] for k in batch}))
+        out_sh = NamedSharding(mesh, sp.logits_spec(mesh, shape, cfg))
+        fn = jax.jit(prefill_fwd, in_shardings=in_sh, out_shardings=out_sh)
+        return fn, (state_shapes["params"], batch)
+
+    # decode — serving layout (beyond-paper perf iteration 2, see
+    # EXPERIMENTS.md §Perf): weights bf16 and TP-only (replicated over the
+    # data axis) so no FSDP all-gather runs on the latency-critical decode
+    # step; each data-rank group serves its own requests, which is also the
+    # layout the DDS replica router assumes.  REPRO_DECODE_LAYOUT=fsdp
+    # reproduces the paper-faithful baseline (fp32 + FSDP weights).
+    import jax.numpy as jnp
+    if os.environ.get("REPRO_DECODE_LAYOUT", "tp") == "tp":
+        cfg = cfg.replace(param_dtype=jnp.bfloat16)
+        pc = dataclasses.replace(pc, fsdp_params=False)
+        state_shapes = jax.eval_shape(
+            lambda: steps_lib.init_train_state(jax.random.PRNGKey(0), cfg))
+        param_specs = sp.state_specs(state_shapes, mesh, pc)
+    cspecs = sp.cache_specs(cfg, shape, mesh, pc)
+    ispecs = input_specs(cfg, shape)
+    tok_spec = sp.batch_specs(cfg, shape, mesh, pc)["tokens"]
+
+    ways = pc.data_ways
+    batch_sharded = shape.global_batch % max(ways, 1) == 0 and ways > 1
+    use_spmd_decode = (batch_sharded and shape.seq_len % pc.tp == 0
+                       and os.environ.get("REPRO_SPMD_DECODE", "1") == "1")
+
+    def serve_step(params, cache, tokens, cache_index):
+        from repro.sharding import context as shctx
+        if use_spmd_decode:
+            b_ax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+            with shctx.serving_mesh(mesh, batch_axis=b_ax, seq_axis="model"):
+                return model_lib.decode_step(params, cache, tokens,
+                                             cache_index, cfg,
+                                             num_groups=num_groups)
+        logits, new_cache = model_lib.decode_step(
+            params, cache, tokens, cache_index, cfg, num_groups=num_groups)
+        return logits, new_cache
+
+    pspecs = param_specs["params"]
+    in_sh = (sp.named(mesh, pspecs), sp.named(mesh, cspecs),
+             NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, sp.logits_spec(mesh, shape, cfg)),
+              sp.named(mesh, cspecs))
+    fn = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh)
+    return fn, (state_shapes["params"], ispecs["cache"], ispecs["tokens"],
+                ispecs["cache_index"])
+
+
+# ------------------------------------------------------- HLO collective scan
+_COLL_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([\d,]*)\].*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "s64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-buffer bytes per collective kind from HLO text."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if kind.endswith("-done"):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        byt = n * _DTYPE_BYTES.get(dtype, 4)
+        out[kind] = out.get(kind, 0.0) + byt
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if shape_name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
+        rec["status"] = "SKIP"
+        rec["reason"] = "unbounded full attention; 500k context infeasible " \
+                        "(DESIGN.md §4)"
+        return _save(rec) if save else rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pc = parallel_config_for(mesh)
+    t0 = time.time()
+    try:
+        fn, args = build_cell(cfg, shape, mesh, pc)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec.update({
+            "status": "OK",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops": float(cost.get("flops", -1.0)),
+            "hlo_bytes": float(cost.get("bytes accessed", -1.0)),
+            "collective_bytes": coll,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            "num_devices": mesh.devices.size,
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return _save(rec) if save else rec
+
+
+def _save(rec: Dict[str, Any]) -> Dict[str, Any]:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh'].replace('x','_')}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp)
+                tag = "OK " if rec["status"] == "OK" else rec["status"]
+                extra = ""
+                if rec["status"] == "OK":
+                    extra = (f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                             f"flops={rec['flops']:.3e} "
+                             f"coll={rec['collective_bytes']['total']:.3e}B")
+                elif rec["status"] == "FAIL":
+                    extra = rec["error"][:160]
+                print(f"[{tag}] {arch:22s} {shape:12s} {rec['mesh']:8s} {extra}",
+                      flush=True)
+                results.append(rec)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\ndry-run: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL "
+          f"of {len(results)} cells")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

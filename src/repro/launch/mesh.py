@@ -1,0 +1,34 @@
+"""Production meshes.  Functions, not constants: importing this module must
+never touch jax device state."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.common.config import ParallelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod = 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(dp: int, tp: int, pods: int = 1):
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def make_host_mesh():
+    """Whatever this host has, as a (data,) mesh — for tests/examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def parallel_config_for(mesh) -> ParallelConfig:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ParallelConfig(dp=shape.get("data", 1), tp=shape.get("model", 1),
+                          pods=shape.get("pod", 1))

@@ -1,0 +1,120 @@
+"""Multi-host bring-up: everything between `srun python train.py` on N hosts
+and a live global mesh.
+
+On a real TPU/TRN cluster each host runs this exact entrypoint; the
+coordinator address and host count come from the scheduler's environment
+(SLURM, GCE TPU-VM metadata, or explicit flags).  On this container it
+degrades to single-process (initialize() is a no-op without peers), so the
+code path stays tested.
+
+Fleet bring-up mirrors the paper's join protocol:
+  1. jax.distributed.initialize            (join the job)
+  2. certification                          (device profile sanity: chip
+                                             count/memory as "slots")
+  3. UP publisher start                     (heartbeats to the MP table)
+  4. mesh construction over global devices  (data/model[/pod] axes)
+  5. restore-or-init from the checkpoint dir (elastic resume)
+"""
+from __future__ import annotations
+
+import os
+import socket
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclass
+class ClusterEnv:
+    coordinator: str
+    num_processes: int
+    process_id: int
+
+    @property
+    def is_multiprocess(self) -> bool:
+        return self.num_processes > 1
+
+
+def detect_cluster() -> ClusterEnv:
+    """SLURM first, then explicit REPRO_* vars, else single-process."""
+    if "SLURM_NTASKS" in os.environ and int(os.environ["SLURM_NTASKS"]) > 1:
+        nodelist = os.environ.get("SLURM_STEP_NODELIST",
+                                  os.environ.get("SLURM_NODELIST", ""))
+        head = nodelist.split(",")[0].replace("[", "").split("-")[0] \
+            if nodelist else socket.gethostname()
+        return ClusterEnv(
+            coordinator=f"{head}:{os.environ.get('REPRO_PORT', '8476')}",
+            num_processes=int(os.environ["SLURM_NTASKS"]),
+            process_id=int(os.environ["SLURM_PROCID"]))
+    if "REPRO_NUM_PROCESSES" in os.environ:
+        return ClusterEnv(
+            coordinator=os.environ["REPRO_COORDINATOR"],
+            num_processes=int(os.environ["REPRO_NUM_PROCESSES"]),
+            process_id=int(os.environ["REPRO_PROCESS_ID"]))
+    return ClusterEnv(coordinator="", num_processes=1, process_id=0)
+
+
+def initialize(env: Optional[ClusterEnv] = None) -> ClusterEnv:
+    env = env or detect_cluster()
+    if env.is_multiprocess:
+        jax.distributed.initialize(
+            coordinator_address=env.coordinator,
+            num_processes=env.num_processes,
+            process_id=env.process_id)
+    return env
+
+
+def certify_host(min_devices: int = 1,
+                 min_hbm_bytes: int = 0) -> Tuple[bool, str]:
+    """The paper's device certification, per host: enough chips + memory."""
+    local = jax.local_devices()
+    if len(local) < min_devices:
+        return False, f"{len(local)} local devices < required {min_devices}"
+    if min_hbm_bytes:
+        for d in local:
+            stats = getattr(d, "memory_stats", lambda: None)()
+            if stats and stats.get("bytes_limit", 1 << 62) < min_hbm_bytes:
+                return False, f"device {d.id}: insufficient memory"
+    return True, "ok"
+
+
+def global_mesh(dp: Optional[int] = None, tp: Optional[int] = None,
+                pods: int = 1):
+    """Mesh over all global devices; defaults to (n_devices, 1)."""
+    n = jax.device_count()
+    if dp is None and tp is None:
+        dp, tp = n // pods, 1
+    elif tp is None:
+        tp = n // (dp * pods)
+    elif dp is None:
+        dp = n // (tp * pods)
+    assert dp * tp * pods == n, (dp, tp, pods, n)
+    from repro.launch.mesh import make_mesh
+    return make_mesh(dp, tp, pods)
+
+
+def bringup(*, required_apps=None, heartbeat_ms: float = 1000.0,
+            mp_table=None):
+    """Full node bring-up; returns (env, mesh, publisher or None)."""
+    from repro.core.latency import NodeState
+    from repro.core.profile import DeviceProfile
+    from repro.core.telemetry import MaintainProfileTable, UpdateProfilePublisher
+
+    env = initialize()
+    ok, why = certify_host()
+    if not ok:
+        raise RuntimeError(f"host certification failed: {why}")
+    mesh = global_mesh()
+
+    publisher = None
+    if mp_table is not None:
+        prof = DeviceProfile(
+            device_id=f"host{env.process_id}",
+            slots=len(jax.local_devices()), apps=required_apps or {})
+        publisher = UpdateProfilePublisher(
+            prof.device_id, prof,
+            lambda: NodeState(running=0, queued=0),
+            mp_table, period_ms=heartbeat_ms)
+        publisher.start()
+    return env, mesh, publisher

@@ -1,0 +1,121 @@
+"""End-to-end training driver.
+
+Wires together: config -> model init -> sharded train_step -> synthetic data
+pipeline -> checkpoint manager (async, atomic) -> telemetry/straggler monitor.
+Runs real steps on this host (smoke configs) and lowers unchanged onto the
+production mesh (the dry-run shares ``build_cell``'s spec plumbing).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig, TrainConfig
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticDataset
+from repro.checkpoint.manager import CheckpointManager
+from repro.ft.monitor import StragglerMonitor
+from repro.launch.mesh import make_host_mesh, parallel_config_for
+from repro.sharding import specs as sp
+from repro.training import steps as steps_lib
+
+
+def train_loop(cfg: ModelConfig, tc: TrainConfig, *, global_batch: int,
+               seq_len: int, steps: int, ckpt_dir: Optional[str] = None,
+               ckpt_every: int = 0, resume: bool = False,
+               log_every: int = 10, mesh=None,
+               monitor: Optional[StragglerMonitor] = None,
+               log_fn=print) -> Dict[str, Any]:
+    mesh = mesh or make_host_mesh()
+    pc = parallel_config_for(mesh)
+    num_groups = pc.data_ways
+
+    ds = SyntheticDataset(cfg, DataConfig(global_batch=global_batch,
+                                          seq_len=seq_len, seed=tc.seed))
+    state_shapes = jax.eval_shape(
+        lambda: steps_lib.init_train_state(jax.random.PRNGKey(tc.seed), cfg))
+    specs = sp.state_specs(state_shapes, mesh, pc)
+    state_sh = sp.named(mesh, specs)
+
+    start_step = 0
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if resume and mgr and mgr.latest_step() is not None:
+        start_step = mgr.latest_step()
+        state = mgr.restore(start_step, state_shapes)
+        state = jax.device_put(state, state_sh)
+        log_fn(f"resumed from step {start_step}")
+    else:
+        with jax.default_device(jax.devices()[0]):
+            state = steps_lib.init_train_state(jax.random.PRNGKey(tc.seed), cfg)
+        state = jax.device_put(state, state_sh)
+
+    train_step = jax.jit(
+        steps_lib.make_train_step(cfg, tc, num_groups=num_groups),
+        in_shardings=(state_sh, None), out_shardings=(state_sh, None),
+        donate_argnums=(0,))
+
+    history = []
+    t_start = time.perf_counter()
+    for step in range(start_step, start_step + steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, batch)
+        metrics = jax.device_get(metrics)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        if monitor is not None:
+            monitor.observe(f"host{jax.process_index()}", dt_ms)
+        history.append({"step": step + 1, "ms": dt_ms,
+                        **{k: float(v) for k, v in metrics.items()}})
+        if log_every and (step + 1) % log_every == 0:
+            m = history[-1]
+            log_fn(f"step {m['step']:5d} loss {m['loss']:.4f} "
+                   f"ce {m['ce']:.4f} gnorm {m['grad_norm']:.3f} "
+                   f"lr {m['lr']:.2e} {dt_ms:.0f}ms")
+        if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
+            mgr.save_async(step + 1, state)
+    if mgr:
+        mgr.wait()
+        mgr.save(start_step + steps, state)
+    wall = time.perf_counter() - t_start
+    return {"state": state, "history": history, "wall_s": wall,
+            "final_loss": history[-1]["loss"] if history else float("nan")}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["cosine", "wsd", "linear", "constant"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainConfig(learning_rate=args.lr, schedule=args.schedule,
+                     total_steps=args.steps, warmup_steps=max(args.steps // 10, 1),
+                     microbatches=args.microbatches)
+    out = train_loop(cfg, tc, global_batch=args.batch, seq_len=args.seq,
+                     steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every, resume=args.resume)
+    print(f"done: {args.steps} steps in {out['wall_s']:.1f}s, "
+          f"final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

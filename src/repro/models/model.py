@@ -1,0 +1,247 @@
+"""Decoder-only LM over the composable block stack.
+
+Layers execute as ``lax.scan`` over repeating *pattern periods* (gemma3's
+5 local + 1 global, recurrentgemma's rglru/rglru/attn, llama-vision's
+every-5th-cross) so 100-layer graphs lower as one period body — essential
+for keeping 80 multi-pod dry-run compiles tractable.  Layers that do not
+fill a whole period run unrolled as the ``tail``.
+
+Params tree:
+  {"embed": .., "periods": (slot0_stacked, slot1_stacked, ...),
+   "tail": (layerA, layerB, ...), "final_norm": .., ["head": ..]}
+Caches mirror the same periods/tail structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ATTN, CROSS, ModelConfig
+from repro.models import blocks as blk
+from repro.models import layers as lyr
+
+
+# ------------------------------------------------------------------------ init
+def init_model(key, cfg: ModelConfig) -> Dict[str, Any]:
+    cfg.validate()
+    kinds = list(zip(cfg.layer_kinds(), cfg.attn_kinds()))
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    layer_params = [
+        blk.init_block(keys[i], cfg, kinds[i][0], kinds[i][1])
+        for i in range(cfg.num_layers)
+    ]
+    p_len, reps = cfg.pattern_period, cfg.num_periods
+    periods = tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[layer_params[r * p_len + s] for r in range(reps)])
+        for s in range(p_len)
+    )
+    tail = tuple(layer_params[reps * p_len:])
+    params = {
+        "embed": lyr.init_embedding(keys[-2], cfg),
+        "periods": periods,
+        "tail": tail,
+        "final_norm": lyr.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = lyr.init_logits_head(keys[-1], cfg)
+    return params
+
+
+def count_params(cfg: ModelConfig) -> int:
+    from repro.common.tree import tree_count
+    shapes = jax.eval_shape(functools.partial(init_model, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    return tree_count(shapes)
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: only top-k experts count)."""
+    total = count_params(cfg)
+    if not cfg.num_experts:
+        return total
+    expert_p = 3 * cfg.d_model * cfg.d_ff          # gate/up/down per expert
+    n_moe_layers = sum(1 for k in cfg.layer_kinds() if k in (ATTN, CROSS))
+    inactive = n_moe_layers * (cfg.num_experts - cfg.num_experts_per_tok) * expert_p
+    return total - inactive
+
+
+# --------------------------------------------------------------------- forward
+def forward(params, tokens, cfg: ModelConfig, *, enc=None, num_groups: int = 1,
+            training: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) int32 (or (B, S, d_model) precomputed embeddings for
+    stub-frontend archs).  Returns (logits (B,S,V), aux_loss scalar)."""
+    if tokens.ndim == 2:
+        x = lyr.embed(params["embed"], tokens, cfg)
+    else:
+        x = tokens.astype(cfg.dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    period_kinds = cfg.period_kinds()
+
+    def period_body(carry, slot_params):
+        x, aux = carry
+        for si, (kind, akind) in enumerate(period_kinds):
+            x, a = blk.apply_block(slot_params[si], x, cfg, kind, akind,
+                                   positions=positions, enc=enc,
+                                   num_groups=num_groups)
+            aux = aux + a
+        return (x, aux), None
+
+    body = period_body
+    if training and cfg.remat:
+        body = jax.checkpoint(period_body, prevent_cse=False)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.num_periods > 0 and cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["periods"])
+    else:
+        aux = aux0
+        reps = cfg.num_periods
+        for r in range(reps):
+            slot_params = tuple(jax.tree.map(lambda a: a[r], sp)
+                                for sp in params["periods"])
+            (x, aux), _ = period_body((x, aux), slot_params)
+
+    for ti, (kind, akind) in enumerate(cfg.tail_kinds()):
+        x, a = blk.apply_block(params["tail"][ti], x, cfg, kind, akind,
+                               positions=positions, enc=enc,
+                               num_groups=num_groups)
+        aux = aux + a
+
+    x = lyr.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lyr.logits_head(params["embed"], x, cfg, params.get("head"))
+    logits = _maybe_shard_vocab(logits, cfg)
+    return logits, aux
+
+
+def _maybe_shard_vocab(logits, cfg: ModelConfig):
+    """Constrain the vocab dim onto the TP axis when V doesn't divide it
+    (minicpm's 122753, mamba2's 50280): GSPMD pads uneven intermediates, so
+    the logits matmul + CE logsumexp still split 16 ways (§Perf iter 3b)."""
+    from repro.sharding import context as shctx
+
+    ctx = shctx.get_activation_mesh()
+    if ctx is None:
+        return logits
+    mesh, axis = ctx
+    if cfg.vocab_size % mesh.shape[axis] == 0:
+        return logits
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    U = P.UNCONSTRAINED
+    return jax.lax.with_sharding_constraint(
+        logits, NamedSharding(mesh, P(U, U, axis)))
+
+
+# ---------------------------------------------------------------------- caches
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, Any]:
+    kinds = cfg.period_kinds()
+    p_len, reps = cfg.pattern_period, cfg.num_periods
+
+    def one(kind, akind):
+        return blk.init_block_cache(cfg, kind, akind, batch, capacity)
+
+    periods = tuple(
+        jax.tree.map(lambda x: jnp.broadcast_to(x, (reps,) + x.shape),
+                     one(k, a))
+        for (k, a) in kinds
+    )
+    tail = tuple(one(k, a) for (k, a) in cfg.tail_kinds())
+    return {"periods": periods, "tail": tail}
+
+
+# ---------------------------------------------------------------------- decode
+def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
+                *, num_groups: int = 1) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """tokens: (B, 1) int32 (or (B, 1, d) embeddings).  One decode step:
+    inserts KV at ``cache_index`` and predicts the next token's logits."""
+    if tokens.ndim == 2:
+        x = lyr.embed(params["embed"], tokens, cfg)
+    else:
+        x = tokens.astype(cfg.dtype)
+    cache_index = jnp.asarray(cache_index, jnp.int32)
+    period_kinds = cfg.period_kinds()
+
+    def period_body(x, slot_params_and_cache):
+        slot_params, slot_caches = slot_params_and_cache
+        new_caches = []
+        for si, (kind, akind) in enumerate(period_kinds):
+            x, nc, _ = blk.apply_block_decode(
+                slot_params[si], x, slot_caches[si], cfg, kind, akind,
+                cache_index=cache_index, num_groups=num_groups)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if cfg.num_periods > 0 and cfg.scan_layers:
+        x, new_periods = jax.lax.scan(
+            period_body, x, (params["periods"], cache["periods"]))
+    else:
+        new_list = []
+        for r in range(cfg.num_periods):
+            sp = tuple(jax.tree.map(lambda a: a[r], t) for t in params["periods"])
+            sc = tuple(jax.tree.map(lambda a: a[r], t) for t in cache["periods"])
+            x, ncs = period_body(x, (sp, sc))
+            new_list.append(ncs)
+        if new_list:
+            new_periods = tuple(
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[nl[s] for nl in new_list])
+                for s in range(len(period_kinds)))
+        else:
+            new_periods = cache["periods"]
+
+    new_tail = []
+    for ti, (kind, akind) in enumerate(cfg.tail_kinds()):
+        x, nc, _ = blk.apply_block_decode(
+            params["tail"][ti], x, cache["tail"][ti], cfg, kind, akind,
+            cache_index=cache_index, num_groups=num_groups)
+        new_tail.append(nc)
+
+    x = lyr.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lyr.logits_head(params["embed"], x, cfg, params.get("head"))
+    return logits, {"periods": new_periods, "tail": tuple(new_tail)}
+
+
+# --------------------------------------------------------------------- prefill
+def prefill(params, tokens, cfg: ModelConfig, capacity: int, *, enc=None,
+            num_groups: int = 1) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Run the prompt through the stack, returning last-position logits and a
+    cache filled up to ``tokens.shape[1]`` (ready for decode_step at index
+    S, S+1, ...).  Uses the unrolled path (prefill is not the scan-critical
+    compile)."""
+    if tokens.ndim == 2:
+        x = lyr.embed(params["embed"], tokens, cfg)
+    else:
+        x = tokens.astype(cfg.dtype)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    kinds = list(zip(cfg.layer_kinds(), cfg.attn_kinds()))
+    p_len, reps = cfg.pattern_period, cfg.num_periods
+
+    caches = []
+    for i, (kind, akind) in enumerate(kinds):
+        if i < reps * p_len:
+            r, slot = divmod(i, p_len)
+            lp = jax.tree.map(lambda a: a[r], params["periods"][slot])
+        else:
+            lp = params["tail"][i - reps * p_len]
+        x, c, _ = blk.apply_block_prefill(lp, x, cfg, kind, akind,
+                                          positions=positions, enc=enc,
+                                          num_groups=num_groups,
+                                          capacity=capacity)
+        caches.append(c)
+
+    period_caches = tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[caches[r * p_len + sl] for r in range(reps)])
+        for sl in range(p_len)
+    )
+    tail_caches = tuple(caches[reps * p_len:])
+    x = lyr.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lyr.logits_head(params["embed"], x[:, -1:], cfg, params.get("head"))
+    return logits, {"periods": period_caches, "tail": tail_caches}

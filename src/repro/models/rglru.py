@@ -1,0 +1,86 @@
+"""Griffin / RecurrentGemma recurrent block: proj -> causal conv -> RG-LRU,
+gated by a parallel GeLU branch (Hawk-style), then out-projection.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, w), 0, cfg.param_dtype),     # recurrent branch
+        "w_y": dense_init(ks[1], (d, w), 0, cfg.param_dtype),     # gate branch
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), 0, cfg.param_dtype),
+        "conv_b": jnp.zeros((w,), cfg.param_dtype),
+        "w_a": dense_init(ks[3], (w, w), 0, cfg.param_dtype),     # recurrence gate
+        "b_a": jnp.zeros((w,), cfg.param_dtype),
+        "w_i": dense_init(ks[4], (w, w), 0, cfg.param_dtype),     # input gate
+        "b_i": jnp.zeros((w,), cfg.param_dtype),
+        # Λ init so that a^c = exp(-c softplus Λ sigmoid r) sits in (0.9, 0.999)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / cfg.rglru_c
+        )).astype(cfg.param_dtype),
+        "w_out": dense_init(ks[5], (w, d), 0, cfg.param_dtype),
+    }
+
+
+def _gates(params, u, cfg: ModelConfig):
+    """u: (..., W) conv output -> (log_a, gate_i) both (..., W), float32."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid((u @ params["w_a"].astype(u.dtype)).astype(f32)
+                       + params["b_a"].astype(f32))
+    i = jax.nn.sigmoid((u @ params["w_i"].astype(u.dtype)).astype(f32)
+                       + params["b_i"].astype(f32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(params["lam"].astype(f32)) * r
+    return log_a, i
+
+
+def rglru_block(params, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence Griffin recurrent block.  x: (B, S, d_model)."""
+    dtype = x.dtype
+    u = x @ params["w_x"].astype(dtype)
+    gate = jax.nn.gelu(x @ params["w_y"].astype(dtype))
+    u_conv = ops.causal_conv1d(u, params["conv_w"], params["conv_b"])
+    log_a, gate_i = _gates(params, u_conv, cfg)
+    h = ops.rglru(u_conv, log_a.astype(dtype), gate_i.astype(dtype))
+    out = (h * gate) @ params["w_out"].astype(dtype)
+    if return_state:
+        w = cfg.conv_width - 1
+        b, s, _ = u.shape
+        pad = max(w - s, 0)
+        tail = u[:, max(s - w, 0):]
+        if pad:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"conv": tail, "h": h[:, -1].astype(jnp.float32)}
+    return out
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    w = cfg.rglru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode(params, x, cache, cfg: ModelConfig):
+    """Single-token step.  x: (B, 1, d_model) -> (y, new_cache)."""
+    dtype = x.dtype
+    u = x[:, 0] @ params["w_x"].astype(dtype)
+    gate = jax.nn.gelu(x[:, 0] @ params["w_y"].astype(dtype))
+    u_conv, conv_state = ops.causal_conv1d_step(
+        cache["conv"], u, params["conv_w"], params["conv_b"])
+    log_a, gate_i = _gates(params, u_conv, cfg)
+    y, h_new = ops.rglru_decode_step(cache["h"], u_conv, log_a, gate_i)
+    out = ((y.astype(dtype) * gate) @ params["w_out"].astype(dtype))[:, None]
+    return out, {"conv": conv_state, "h": h_new}

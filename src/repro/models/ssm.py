@@ -1,0 +1,149 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Faithful to the Mamba2 block structure: fused in-projection producing
+(z, x, B, C, dt), short causal depthwise conv over (x,B,C), softplus dt,
+per-head scalar A, SSD scan, gated RMSNorm, out-projection.
+The SSD scan runs through ``repro.kernels.ops.ssd`` (Pallas on TPU,
+chunked jnp elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_d_inner
+    n_heads = cfg.ssm_heads
+    n_state = cfg.ssm_state
+    conv_dim = d_inner + 2 * n_state
+    d_in_proj = 2 * d_inner + 2 * n_state + n_heads
+    return d_inner, n_heads, n_state, conv_dim, d_in_proj
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d_inner, n_heads, n_state, conv_dim, d_in_proj = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    dt = jnp.exp(
+        jax.random.uniform(ks[3], (n_heads,)) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, d_in_proj), 0, cfg.param_dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_dim), 0, cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        # dt_bias = inverse-softplus of sampled dt (mamba2 init)
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(cfg.param_dtype),
+        "a_log": jnp.log(
+            jax.random.uniform(ks[4], (n_heads,), minval=1.0, maxval=16.0)
+        ).astype(cfg.param_dtype),
+        "d_skip": jnp.ones((n_heads,), cfg.param_dtype),
+        "norm": init_rmsnorm(d_inner, cfg.param_dtype),
+        "out_proj": dense_init(ks[2], (d_inner, cfg.d_model), 0, cfg.param_dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_inner, n_heads, n_state, conv_dim, _ = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def ssm_mixer(params, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence SSD mixer.  x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    d_inner, n_heads, n_state, conv_dim, _ = _dims(cfg)
+    dtype = x.dtype
+
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(ops.causal_conv1d(xbc, params["conv_w"], params["conv_b"]))
+    xs = xbc[..., :d_inner].reshape(b, s, n_heads, cfg.ssm_head_dim)
+    b_mat = xbc[..., d_inner:d_inner + n_state]
+    c_mat = xbc[..., d_inner + n_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    chunk = min(cfg.ssm_chunk, s)
+    while s % chunk:
+        chunk //= 2
+    y = ops.ssd(xs, dt.astype(dtype), params["a_log"], b_mat, c_mat,
+                params["d_skip"], chunk=max(chunk, 1))
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    if return_state:
+        conv_state = _tail_conv_state(x, xbc_pre=None, cfg=cfg, zx=zxbcdt)
+        ssm_state = _final_ssd_state(xs, dt, params["a_log"], b_mat)
+        return out, {"conv": conv_state, "state": ssm_state}
+    return out
+
+
+def _tail_conv_state(x, xbc_pre, cfg: ModelConfig, zx):
+    """Last (conv_width-1) pre-activation conv inputs, zero-padded on the left."""
+    d_inner, _, n_state, conv_dim, _ = _dims(cfg)
+    _, xbc, _ = _split_proj(zx, cfg)
+    w = cfg.conv_width - 1
+    b, s, _ = xbc.shape
+    pad = max(w - s, 0)
+    tail = xbc[:, max(s - w, 0):]
+    if pad:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return tail
+
+
+def _final_ssd_state(xs, dt, a_log, b_mat):
+    """Recompute the final SSD state h_S (B,H,N,P) for cache handoff."""
+    f32 = jnp.float32
+    bsz, s, h, p = xs.shape
+    a = -jnp.exp(a_log.astype(f32))
+    log_decay = dt.astype(f32) * a[None, None, :]          # (B,S,H)
+    cum = jnp.cumsum(log_decay, axis=1)
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)           # (B,S,H)
+    xb = xs.astype(f32) * dt.astype(f32)[..., None]
+    return jnp.einsum("bsn,bsh,bshp->bhnp", b_mat.astype(f32), decay_to_end, xb)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None):
+    d_inner, n_heads, n_state, conv_dim, _ = _dims(cfg)
+    dtype = dtype or cfg.dtype
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, n_heads, n_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def ssm_decode(params, x, cache, cfg: ModelConfig):
+    """Single-token step.  x: (B, 1, d_model) -> (y, new_cache)."""
+    b = x.shape[0]
+    d_inner, n_heads, n_state, conv_dim, _ = _dims(cfg)
+    dtype = x.dtype
+
+    zxbcdt = (x[:, 0] @ params["in_proj"].astype(dtype))
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim:]
+
+    xbc, conv_state = ops.causal_conv1d_step(
+        cache["conv"], xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner].reshape(b, n_heads, cfg.ssm_head_dim)
+    b_t = xbc[..., d_inner:d_inner + n_state]
+    c_t = xbc[..., d_inner + n_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    y, h_new = ops.ssd_decode_step(cache["state"], xs, dt, params["a_log"],
+                                   b_t, c_t, params["d_skip"])
+    y = y.reshape(b, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(dtype))[:, None]
+    return out, {"conv": conv_state, "state": h_new}

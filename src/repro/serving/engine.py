@@ -1,0 +1,197 @@
+"""Serving engine: continuous-batching inference driven by the DDS core.
+
+The paper's architecture, realized for model serving:
+
+  * each **replica** = a warm compiled (prefill, decode) executable pair +
+    weights + KV-cache slots: the "warm container".  Replica construction
+    compiles up front — the cold-start lesson (Tables III/IV: never
+    cold-start on the request path).
+  * the **router** is the paper's two-level DDS: requests carry SLO
+    deadlines; placement uses profile-predicted T_task over the replicas'
+    telemetry (queue depth, in-flight decodes), local-first when the
+    request's origin replica can meet its deadline.
+  * each replica runs **continuous batching**: new requests join the decode
+    batch at slot granularity; prefill is chunked to bound decode stalls.
+
+On this host replicas are thread-backed; on a fleet they are pod slices —
+the scheduler logic is identical (it only sees profiles + telemetry).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.core.latency import NodeState, Task
+from repro.core.policies import NodeView, Policy
+from repro.core.profile import AppProfile, Curve, DeviceProfile, LinkProfile
+from repro.models import model as model_lib
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int
+    deadline_ms: float              # SLO: end-to-end completion deadline
+    created_ms: float = 0.0
+    enc: Optional[np.ndarray] = None
+
+
+@dataclass
+class RequestResult:
+    request_id: int
+    tokens: np.ndarray
+    finished_ms: float
+    replica: str
+    created_ms: float
+
+    def latency_ms(self) -> float:
+        return self.finished_ms - self.created_ms
+
+    def met(self, deadline_ms: float) -> bool:
+        return self.latency_ms() <= deadline_ms
+
+
+class Replica:
+    """One model replica with ``slots`` concurrent decode lanes.
+
+    Weights + jitted prefill/decode are built (and compiled) at
+    construction; serving never compiles.
+    """
+
+    def __init__(self, name: str, cfg: ModelConfig, params, *,
+                 slots: int = 2, capacity: int = 256, greedy: bool = True):
+        self.name = name
+        self.cfg = cfg
+        self.params = params
+        self.capacity = capacity
+        self.slots = slots
+        self._sem = threading.Semaphore(slots)
+        self._running = 0
+        self._queued = 0
+        self._lock = threading.Lock()
+
+        # warm the executables (cold start happens HERE, not on requests)
+        self._prefill = jax.jit(
+            lambda p, toks: model_lib.prefill(p, toks, cfg, capacity))
+        self._decode = jax.jit(
+            lambda p, cache, tok, idx: model_lib.decode_step(
+                p, cache, tok, idx, cfg))
+        t0 = time.perf_counter()
+        dummy = jnp.zeros((1, 8), jnp.int32)
+        logits, cache = self._prefill(params, dummy)
+        self._decode(params, cache, dummy[:, :1], jnp.asarray(8))
+        self.warmup_s = time.perf_counter() - t0
+
+    # -------------------------------------------------------------- serving
+    def generate(self, req: Request) -> np.ndarray:
+        with self._lock:
+            self._queued += 1
+        with self._sem:
+            with self._lock:
+                self._queued -= 1
+                self._running += 1
+            try:
+                return self._generate(req)
+            finally:
+                with self._lock:
+                    self._running -= 1
+
+    def _generate(self, req: Request) -> np.ndarray:
+        prompt = jnp.asarray(req.prompt)[None, :]
+        logits, cache = self._prefill(self.params, prompt)
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        pos = prompt.shape[1]
+        for _ in range(req.max_new_tokens):
+            out.append(int(tok[0, 0]))
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.asarray(pos))
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            pos += 1
+        return np.asarray(out, np.int32)
+
+    # ------------------------------------------------------------ telemetry
+    def state(self) -> NodeState:
+        with self._lock:
+            return NodeState(running=self._running, queued=self._queued,
+                             updated_ms=time.monotonic() * 1e3)
+
+    def free_slots(self) -> int:
+        with self._lock:
+            return max(self.slots - self._running - self._queued, 0)
+
+
+def profile_replica(rep: Replica, prompt_lens=(8, 32, 128),
+                    new_tokens: int = 8) -> AppProfile:
+    """Measure this replica's latency profile (the paper's pre-evaluation):
+    prompt length plays the role of image-KB, concurrency via its slots."""
+    times = []
+    for s in prompt_lens:
+        req = Request(0, np.ones((s,), np.int32), new_tokens, 1e9)
+        t0 = time.perf_counter()
+        rep._generate(req)
+        times.append((time.perf_counter() - t0) * 1e3)
+    base = times[0]
+    # contention on a single host: assume linear slowdown past 1 lane
+    conc = [1.0, 2.0, 4.0]
+    cont = [base, base * 2.0, base * 4.0]
+    return AppProfile(
+        app_id="serve", base_ms=base,
+        contention=Curve(conc, cont),
+        size_curve=Curve([float(s) for s in prompt_lens], times),
+        reference_size=float(prompt_lens[0]))
+
+
+class ServingFleet:
+    """DDS router over replicas.  ``source`` is the replica co-located with
+    the request origin (paper: Rasp1 next to the camera)."""
+
+    def __init__(self, policy: Policy, source: str, coordinator: str):
+        self.policy = policy
+        self.source = source
+        self.coordinator = coordinator
+        self.replicas: Dict[str, Replica] = {}
+        self.profiles: Dict[str, DeviceProfile] = {}
+        self.stats: Dict[str, int] = {}
+
+    def add_replica(self, rep: Replica, profile: Optional[AppProfile] = None,
+                    link: Optional[LinkProfile] = None) -> None:
+        prof = profile or profile_replica(rep)
+        self.replicas[rep.name] = rep
+        self.profiles[rep.name] = DeviceProfile(
+            rep.name, rep.slots, {"serve": prof},
+            link or LinkProfile(bandwidth_kbps=1e6, rtt_ms=0.2))
+
+    def _view(self, name: str) -> NodeView:
+        rep = self.replicas[name]
+        return NodeView(profile=self.profiles[name], state=rep.state(),
+                        free_slots=rep.free_slots())
+
+    def route(self, req: Request) -> str:
+        """Two-level DDS placement; returns chosen replica name."""
+        now = time.monotonic() * 1e3
+        task = Task(task_id=req.request_id, app_id="serve",
+                    size_kb=float(len(req.prompt)), created_ms=req.created_ms
+                    or now, constraint_ms=req.deadline_ms, source=self.source)
+        if self.policy.decide_source(task, now, self._view(self.source)) == "local":
+            return self.source
+        peers = {n: self._view(n) for n in self.replicas
+                 if n not in (self.coordinator, self.source)}
+        return self.policy.decide_coordinator(
+            task, now, self._view(self.coordinator), peers)
+
+    def submit(self, req: Request) -> RequestResult:
+        req.created_ms = req.created_ms or time.monotonic() * 1e3
+        name = self.route(req)
+        self.stats[name] = self.stats.get(name, 0) + 1
+        toks = self.replicas[name].generate(req)
+        return RequestResult(req.request_id, toks, time.monotonic() * 1e3,
+                             name, req.created_ms)

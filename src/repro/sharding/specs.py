@@ -1,0 +1,255 @@
+"""Sharding specs: logical layout rules -> PartitionSpec trees.
+
+Layout (single-pod mesh ("data","model"); multi-pod adds a leading "pod"
+axis folded into the FSDP/data group):
+
+  * TP ("model")   : attention heads, FFN hidden, experts (EP), vocab
+  * FSDP ("data"+"pod") : the non-TP dim of every large parameter
+    (ZeRO-3-style gather-on-use is delegated to GSPMD via these specs)
+  * batch          : ("pod","data") on the leading batch dim of activations
+  * sequence       : KV/SSM caches shard sequence over "data" when
+    batch < data ways (long_500k decode)
+
+Rules match parameter-tree path suffixes; stacked period params (leading
+``num_periods`` dim) are handled by rank offset.  Optimizer state (mu/nu)
+inherits the param specs by path reuse.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig, ParallelConfig, ShapeConfig
+
+
+def axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def fsdp_axes(mesh: Mesh, pc: ParallelConfig):
+    """Axes that shard the non-TP param dim (ZeRO/FSDP group)."""
+    if not pc.fsdp_params:
+        return None
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_axes(mesh: Mesh):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+
+# --------------------------------------------------------------- param rules
+# (regex on the '/'-joined path) -> list of candidate specs in priority
+# order; the first whose every dim divides the leaf shape wins (e.g. MoE:
+# expert-parallel when num_experts % tp == 0, else tensor-parallel WITHIN
+# each expert — mixtral's 8 experts on a 16-way model axis).
+def _param_rules(fsdp):
+    M = "model"
+    return [
+        # embeddings / heads — vocab-parallel, D replicated (Megatron-style):
+        # FSDP on the embedding D dim would turn every unembed matmul into a
+        # (B,S,V)-sized data-axis all-reduce of ACTIVATIONS to save only
+        # ~MBs of weight per device (§Perf iter 4).
+        (r"embed/table$",        lambda: [P(M, None)]),
+        (r"head/w$",             lambda: [P(None, M), P(fsdp, M)]),
+        # attention
+        (r"attn/wq$",            lambda: [P(fsdp, M, None)]),
+        (r"attn/wk$",            lambda: [P(fsdp, M, None)]),
+        (r"attn/wv$",            lambda: [P(fsdp, M, None)]),
+        (r"attn/wo$",            lambda: [P(M, None, fsdp)]),
+        (r"attn/(q_norm|k_norm)/scale$", lambda: [P(None)]),
+        # dense mlp (and arctic's dense-residual path)
+        (r"(mlp|dense)/w_(up|gate)$",  lambda: [P(fsdp, M)]),
+        (r"(mlp|dense)/w_down$",       lambda: [P(M, fsdp)]),
+        # moe: EP first, expert-internal TP as fallback
+        (r"moe/router$",         lambda: [P(fsdp, None)]),
+        (r"moe/w_(up|gate)$",    lambda: [P(M, fsdp, None), P(None, fsdp, M)]),
+        (r"moe/w_down$",         lambda: [P(M, None, fsdp), P(None, M, fsdp)]),
+        # mamba2 ssd
+        (r"ssm/in_proj$",        lambda: [P(fsdp, M)]),
+        (r"ssm/conv_w$",         lambda: [P(None, M)]),
+        (r"ssm/conv_b$",         lambda: [P(M)]),
+        (r"ssm/(dt_bias|a_log|d_skip)$", lambda: [P(None)]),
+        (r"ssm/norm/scale$",     lambda: [P(M)]),
+        (r"ssm/out_proj$",       lambda: [P(M, fsdp)]),
+        # rg-lru
+        (r"rec/w_(x|y)$",        lambda: [P(fsdp, M)]),
+        (r"rec/conv_w$",         lambda: [P(None, M)]),
+        (r"rec/conv_b$",         lambda: [P(M)]),
+        (r"rec/w_(a|i)$",        lambda: [P(None, M)]),
+        (r"rec/(b_a|b_i|lam)$",  lambda: [P(M)]),
+        (r"rec/w_out$",          lambda: [P(M, fsdp)]),
+        # norms
+        (r"norm\d?/scale$",      lambda: [P(None)]),
+        (r"final_norm/scale$",   lambda: [P(None)]),
+    ]
+
+
+def _ways(entry, mesh: Mesh) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh cannot divide evenly.
+
+    E.g. 8 kv-heads on a 16-way model axis -> replicate the kv projections
+    (Megatron-style KV duplication for GQA when tp > kv_heads); batch=1
+    (long_500k) -> replicate batch.  jit arguments require even sharding;
+    this keeps every layout decision in one place instead of per-call hacks.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % _ways(entry, mesh) == 0 else None)
+    return P(*out)
+
+
+def _divisible(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> bool:
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    return all(dim % _ways(e, mesh) == 0 for dim, e in zip(shape, entries))
+
+
+def spec_for_param_path(path: str, rank_or_shape, mesh: Mesh,
+                        pc: ParallelConfig) -> P:
+    """PartitionSpec for one parameter leaf (handles period stacking and the
+    optimizer-state prefix mu/nu).  When a shape is given, candidate specs
+    are tried in priority order and the first fully-divisible one wins;
+    the final fallback is the sanitized first candidate."""
+    shape = None if isinstance(rank_or_shape, int) else tuple(rank_or_shape)
+    rank = rank_or_shape if shape is None else len(shape)
+    fsdp = fsdp_axes(mesh, pc)
+    clean = re.sub(r"^(opt/)?(mu|nu)/", "", path)
+    for pattern, maker in _param_rules(fsdp):
+        if re.search(pattern, clean):
+            cands = maker()
+            out = None
+            for spec in cands:
+                pad = rank - len(spec)
+                if pad > 0:   # leading num_periods stacking dim(s)
+                    spec = P(*([None] * pad + list(spec)))
+                if out is None:
+                    out = spec             # default: first candidate
+                if shape is not None and _divisible(spec, shape, mesh):
+                    return spec
+            return out if shape is None else sanitize(out, shape, mesh)
+    return P(*([None] * rank))      # scalars / small leftovers: replicate
+
+
+def state_specs(state_shapes, mesh: Mesh, pc: ParallelConfig):
+    """Spec tree matching an eval_shape'd state/params tree."""
+    from repro.common.tree import tree_paths
+
+    flat = tree_paths(state_shapes)
+    specs = [spec_for_param_path(p, x.shape, mesh, pc) for p, x in flat]
+    return jax.tree.unflatten(jax.tree.structure(state_shapes), specs)
+
+
+# ------------------------------------------------------------- batch specs
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                pc: ParallelConfig) -> Dict[str, P]:
+    """Input shardings for a train/prefill batch."""
+    b_ax = batch_axes(mesh)
+    ways = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.axis_names]))
+    bdim = b_ax if shape.global_batch % max(ways, 1) == 0 and ways > 1 else None
+    specs = {
+        "tokens": P(bdim, None) if cfg.family != "audio" else P(bdim, None, None),
+        "labels": P(bdim, None),
+        "mask": P(bdim, None),
+    }
+    if cfg.family == "vlm":
+        specs["enc"] = P(bdim, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                pc: ParallelConfig):
+    """Spec tree for the decode cache.
+
+    batch >= data ways  -> shard batch over ("pod","data")
+    batch  < data ways  -> sequence-parallel cache: shard the KV sequence
+    dim over "data" (long_500k), batch replicated.  Recurrent states (SSM /
+    RG-LRU) have no sequence dim: they shard heads/width over "model" and
+    batch where possible.
+    """
+    from repro.common.tree import tree_paths
+    from repro.models import model as model_lib
+
+    b_ax = batch_axes(mesh)
+    ways = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.axis_names]))
+    batch_sharded = shape.global_batch % max(ways, 1) == 0 and ways > 1
+    bdim = b_ax if batch_sharded else None
+    seq_ax = None if batch_sharded or not pc.seq_shard_cache else "data"
+
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+    def spec_one(path: str, x) -> P:
+        rank = len(x.shape)
+        core = rank - 1                    # strip the period-stack dim
+        stacked = "periods" in path
+        off = 1 if stacked else 0
+        r = rank - off
+        if path.endswith("/pos"):
+            return P(*([None] * rank))
+        if re.search(r"/(k|v)$", path):
+            # (B, S, Hkv, hd).  Batch-sharded decode shards the SEQUENCE
+            # over "model" (flash-decode split-S): kv heads rarely divide
+            # tp=16, and contracting over a model-sharded S costs only a
+            # tiny (B,H,1) partial-softmax psum instead of gathering the
+            # multi-GB cache (§Perf iter 2).
+            if batch_sharded:
+                spec = [bdim, "model", None, None]
+            else:
+                spec = [bdim, seq_ax, "model", None]
+            return P(*([None] * off + spec))
+        if path.endswith("/state"):        # SSD state (B, H, N, P)
+            return P(*([None] * off + [bdim, "model", None, None]))
+        if path.endswith("/conv"):         # conv tail (B, W-1, C)
+            return P(*([None] * off + [bdim, None, "model"]))
+        if path.endswith("/h"):            # RG-LRU state (B, W)
+            return P(*([None] * off + [bdim, "model"]))
+        return P(*([None] * rank))
+
+    flat = tree_paths(cache_shapes)
+    specs = [sanitize(spec_one(p, x), x.shape, mesh) for p, x in flat]
+    return jax.tree.unflatten(jax.tree.structure(cache_shapes), specs)
+
+
+def logits_spec(mesh: Mesh, shape: ShapeConfig,
+                cfg: Optional[ModelConfig] = None) -> P:
+    b_ax = batch_axes(mesh)
+    ways = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.axis_names]))
+    bdim = b_ax if shape.global_batch % max(ways, 1) == 0 and ways > 1 else None
+    spec = P(bdim, None, "model")
+    if cfg is not None:
+        seq = 1 if shape.is_decode else shape.seq_len
+        spec = sanitize(spec, (shape.global_batch, seq, cfg.vocab_size), mesh)
+        if spec == P(bdim, None, None) and seq % mesh.shape["model"] == 0 \
+                and seq > 1:
+            # vocab can't shard evenly (mamba2/minicpm): emit logits
+            # SEQUENCE-sharded instead of replicated — turns a full
+            # (B,S,V) all-gather into a 1/tp-sized all-to-all (§Perf iter 4)
+            spec = P(bdim, "model", None)
+    return spec
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

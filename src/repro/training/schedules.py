@@ -1,0 +1,41 @@
+"""Learning-rate schedules, including minicpm's WSD (warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+def make_schedule(tc: TrainConfig):
+    """Returns lr(step) -> scalar (traceable)."""
+    base = tc.learning_rate
+    warm = max(tc.warmup_steps, 1)
+    total = max(tc.total_steps, warm + 1)
+
+    if tc.schedule == "constant":
+        def fn(step):
+            return base * jnp.minimum((step + 1) / warm, 1.0)
+    elif tc.schedule == "linear":
+        def fn(step):
+            w = jnp.minimum((step + 1) / warm, 1.0)
+            frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+            return base * w * (1.0 - frac)
+    elif tc.schedule == "cosine":
+        def fn(step):
+            w = jnp.minimum((step + 1) / warm, 1.0)
+            frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+            return base * w * (0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+    elif tc.schedule == "wsd":
+        # minicpm: warmup -> stable at base -> sharp exponential-ish decay in
+        # the final ``wsd_decay_frac`` of training.
+        decay_steps = max(int(total * tc.wsd_decay_frac), 1)
+        stable_end = total - decay_steps
+
+        def fn(step):
+            w = jnp.minimum((step + 1) / warm, 1.0)
+            frac = jnp.clip((step - stable_end) / decay_steps, 0.0, 1.0)
+            decay = jnp.power(0.01, frac)       # 100x drop over the decay leg
+            return base * w * decay
+    else:
+        raise ValueError(tc.schedule)
+    return fn

@@ -1,0 +1,115 @@
+"""Loss and train-step builders.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with in/out shardings from ``repro.sharding``.
+Gradient accumulation microbatches via ``lax.scan``; remat happens inside
+the model (per scanned period).  Optional int8 error-feedback gradient
+compression applies at the optimizer boundary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, TrainConfig
+from repro.models import model as model_lib
+from repro.training import optimizer as opt
+from repro.training.schedules import make_schedule
+
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 0.0):
+    """Next-token CE.  logits: (B,S,V); labels: (B,S) already shifted."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig, num_groups: int = 1):
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        logits, aux = model_lib.forward(
+            params, tokens, cfg, enc=batch.get("enc"),
+            num_groups=num_groups, training=True)
+        # predict token t+1 from position t
+        ce = cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                           batch.get("mask", None) if batch.get("mask") is None
+                           else batch["mask"][:, 1:], tc.z_loss)
+        total = ce + tc.aux_loss_coef * aux
+        return total, {"loss": total, "ce": ce, "aux": aux}
+    return loss_fn
+
+
+def init_train_state(key, cfg: ModelConfig) -> Dict[str, Any]:
+    params = model_lib.init_model(key, cfg)
+    state = {"params": params, "opt": opt.adamw_init(params)}
+    return state
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, num_groups: int = 1):
+    loss_fn = make_loss_fn(cfg, tc, num_groups)
+    schedule = make_schedule(tc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tc.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        # gradient accumulation: scan over microbatch splits of the batch
+        def split(x):
+            b = x.shape[0]
+            assert b % tc.microbatches == 0, (b, tc.microbatches)
+            return x.reshape(tc.microbatches, b // tc.microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, micro):
+            g_acc, m_acc = carry
+            (loss, metrics), g = grad_fn(params, micro)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            m_acc = jax.tree.map(jnp.add, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": jnp.zeros((), jnp.float32),
+              "ce": jnp.zeros((), jnp.float32),
+              "aux": jnp.zeros((), jnp.float32)}
+        (g, m), _ = jax.lax.scan(body, (g0, m0), mb)
+        inv = 1.0 / tc.microbatches
+        return (jax.tree.map(lambda x: x * inv, g),
+                jax.tree.map(lambda x: x * inv, m))
+
+    def train_step(state, batch):
+        grads, metrics = compute_grads(state["params"], batch)
+        if tc.grad_compression == "int8_ef":
+            grads, ef = opt.compress_grads_ef(grads, state["ef"])
+        grads, gnorm = opt.clip_by_global_norm(grads, tc.grad_clip)
+        lr = schedule(state["opt"]["step"])
+        new_params, new_opt = opt.adamw_update(
+            grads, state["opt"], state["params"], lr, tc)
+        new_state = {"params": new_params, "opt": new_opt}
+        if tc.grad_compression == "int8_ef":
+            new_state["ef"] = ef
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, tc: TrainConfig, num_groups: int = 1):
+    loss_fn = make_loss_fn(cfg, tc, num_groups)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests run on CPU with the jnp kernel path by default; kernel tests opt in
+# to pallas_interpret explicitly.  (The dry-run sets its own 512-device flag
+# in a subprocess; tests must see the host's real device count.)
+os.environ.setdefault("REPRO_KERNEL_IMPL", "jnp")

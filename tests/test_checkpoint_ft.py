@@ -1,0 +1,206 @@
+"""Checkpoint manager (atomicity, async, GC, elastic restore) and fault
+tolerance (straggler/dead detection, rescale plans, live fleet failures)."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.common.config import ParallelConfig
+from repro.core.latency import Task
+from repro.core.node import Worker, certify
+from repro.core.policies import make_policy
+from repro.core.profile import FACE, paper_edge_server, paper_raspberry_pi
+from repro.core.scheduler import Fleet
+from repro.ft.elastic import plan_rescale
+from repro.ft.monitor import RecoveryPlan, StragglerMonitor
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "layers": ({"a": jnp.ones((3,))},
+                                  {"a": jnp.zeros((3,))})},
+            "opt": {"step": jnp.asarray(7)}}
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save(10, st)
+    template = jax.eval_shape(lambda: _state())
+    back = mgr.restore(10, template)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(1, _state(1))
+    mgr.save_async(2, _state(2))
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_gc_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_interrupted_write_never_corrupts(tmp_path):
+    """A stale .tmp dir (simulated crash) must not shadow a good step."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _state(5))
+    os.makedirs(str(tmp_path / "step_000000009.tmp0"))
+    assert mgr.latest_step() == 5
+    template = jax.eval_shape(lambda: _state())
+    mgr.restore(5, template)              # restores fine
+
+
+def test_restore_missing_key_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.ones((2,))})
+    with pytest.raises(KeyError):
+        mgr.restore(1, jax.eval_shape(lambda: {"a": jnp.ones((2,)),
+                                               "b": jnp.ones((2,))}))
+
+
+# ------------------------------------------------------------- fault tolerance
+def test_straggler_detection():
+    mon = StragglerMonitor(z_threshold=2.0, rel_threshold=1.3, min_steps=3)
+    for _ in range(10):
+        for w in ("w0", "w1", "w2", "w3"):
+            mon.observe(w, 100.0 + np.random.default_rng(0).normal() * 1.0)
+        mon.observe("slow", 300.0)
+    h = mon.health()
+    assert "slow" in h.stragglers
+    assert not h.dead
+
+
+def test_dead_worker_detection():
+    mon = StragglerMonitor(dead_after_ms=50.0, min_steps=1)
+    mon.observe("w0", 100.0)
+    mon.observe("w1", 100.0)
+    time.sleep(0.1)
+    mon.observe("w1", 100.0)              # w1 alive, w0 silent
+    h = mon.health()
+    assert "w0" in h.dead and "w1" not in h.dead
+
+
+def test_recovery_plan_actions():
+    mon = StragglerMonitor(dead_after_ms=50.0, min_steps=1)
+    mon.observe("w0", 100.0)
+    mon.observe("w1", 100.0)
+    time.sleep(0.1)
+    mon.observe("w1", 100.0)
+    plan = RecoveryPlan(mon)
+    acts = plan.actions(step=42)
+    assert acts["rescale_without"] == ["w0"]
+    assert plan.events and plan.events[0].kind == "dead"
+
+
+def test_plan_rescale_keeps_tp_when_divisible():
+    pc = ParallelConfig(dp=16, tp=16, pods=2)
+    plan = plan_rescale(pc, available_devices=256)   # lost one pod
+    assert plan.new_tp == 16 and plan.new_dp == 16 and plan.shrink
+    plan2 = plan_rescale(pc, available_devices=24)   # deep shrink
+    assert plan2.new_tp * plan2.new_dp <= 24
+    assert 24 % plan2.new_tp == 0
+
+
+def test_certification_rejects_bad_device():
+    prof = paper_raspberry_pi("badpi", slots=0)
+    ok, why = certify(prof, [FACE], min_slots=1)
+    assert not ok and "slots" in why
+    prof2 = paper_raspberry_pi("pi", slots=2)
+    ok2, _ = certify(prof2, ["unknown_app"])
+    assert not ok2
+
+
+# ------------------------------------------------------------- live fleet FT
+def _fast_fn(ms):
+    def fn(task):
+        time.sleep(ms / 1e3)
+        return task.task_id
+    return fn
+
+
+def _mk_fleet(policy="DDS"):
+    fleet = Fleet(make_policy(policy), source="rasp1",
+                  coordinator="edge_server", heartbeat_ms=5,
+                  required_apps=[FACE])
+    fleet.add_worker(Worker(paper_raspberry_pi("rasp1", 2), {FACE: _fast_fn(5)}))
+    fleet.add_worker(Worker(paper_edge_server(4), {FACE: _fast_fn(2)}))
+    fleet.add_worker(Worker(paper_raspberry_pi("rasp2", 2), {FACE: _fast_fn(5)}))
+    return fleet
+
+
+def _submit_n(fleet, n, constraint=500.0, interval_s=0.002):
+    done = []
+    for i in range(n):
+        t = Task(task_id=i, app_id=FACE, size_kb=29.0,
+                 created_ms=time.monotonic() * 1e3,
+                 constraint_ms=constraint, source="rasp1")
+        fleet.submit(t, on_done=done.append)
+        time.sleep(interval_s)
+    deadline = time.monotonic() + 5.0
+    while len(done) < n and time.monotonic() < deadline:
+        time.sleep(0.01)
+    return done
+
+
+def test_live_fleet_completes_all():
+    fleet = _mk_fleet()
+    fleet.start()
+    try:
+        done = _submit_n(fleet, 30)
+        assert len(done) == 30
+        assert all(c.error is None for c in done)
+    finally:
+        fleet.stop()
+
+
+def test_live_fleet_worker_removal_midstream():
+    """Elastic scale-in: removing a worker mid-run must not lose the fleet;
+    subsequent tasks route around it."""
+    fleet = _mk_fleet()
+    fleet.start()
+    try:
+        done1 = _submit_n(fleet, 10)
+        fleet.remove_worker("rasp2")
+        done2 = _submit_n(fleet, 10)
+        assert len(done1) == 10 and len(done2) == 10
+        assert all(c.node != "rasp2" for c in done2)
+    finally:
+        fleet.stop()
+
+
+def test_live_fleet_eods_placement_split():
+    fleet = _mk_fleet("EODS")
+    fleet.start()
+    try:
+        done = _submit_n(fleet, 20)
+        places = {c.node for c in done}
+        assert places == {"rasp1", "edge_server"}
+    finally:
+        fleet.stop()
+
+
+def test_live_fleet_admission_rejects_infeasible():
+    fleet = _mk_fleet()
+    fleet.admission_margin = 1.0
+    fleet.start()
+    try:
+        t = Task(task_id=0, app_id=FACE, size_kb=29.0,
+                 created_ms=time.monotonic() * 1e3,
+                 constraint_ms=10.0, source="rasp1")   # < floor
+        assert fleet.submit(t) is False
+        assert fleet.stats.rejected == 1
+    finally:
+        fleet.stop()

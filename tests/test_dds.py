@@ -1,0 +1,231 @@
+"""DDS core tests: the paper's claims, the predictor math, policies,
+admission, and hypothesis properties of the profile curves."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.admission import admit, min_feasible_ms
+from repro.core.latency import NodeState, Task, predict_process_ms, \
+    predict_queue_ms, predict_total_ms
+from repro.core.policies import DDS, NodeView, make_policy
+from repro.core.profile import (FACE, Curve, paper_edge_server,
+                                paper_raspberry_pi)
+from repro.core.simulator import SimConfig, run_sim
+
+EDGE = paper_edge_server()
+RPI = paper_raspberry_pi()
+
+
+def _task(constraint=1000.0, size=29.0, created=0.0):
+    return Task(task_id=0, app_id=FACE, size_kb=size, created_ms=created,
+                constraint_ms=constraint, source="rasp1")
+
+
+# ------------------------------------------------------------------ predictor
+def test_profile_matches_paper_tables():
+    app = EDGE.app(FACE)
+    # Table V verbatim at measured points
+    assert app.process_time(29.0, 1) == pytest.approx(223.0)
+    assert app.process_time(29.0, 4) == pytest.approx(464.0)
+    # Table II size scaling
+    assert app.process_time(259.0, 1) == pytest.approx(1163.0)
+    # Fig 7 load scaling
+    assert app.process_time(29.0, 1, cpu_load=1.0) == pytest.approx(374.0)
+    # Table III cold start is catastrophic vs warm
+    assert app.cold_start_time(1) > 50 * app.process_time(29.0, 1)
+
+
+def test_t_task_decomposition():
+    """T_task = T_trans + T_que + T_process + T_re, exactly."""
+    st_ = NodeState(running=2, queued=8, cpu_load=0.5)
+    t_total = predict_total_ms(EDGE, _task(), st_, remote=True)
+    t_proc = predict_process_ms(EDGE, _task(), st_)
+    t_que = predict_queue_ms(EDGE, _task(), st_)
+    t_trans = EDGE.link.transfer_time(29.0)
+    t_re = EDGE.link.transfer_time(1.0)
+    assert t_total == pytest.approx(t_trans + t_que + t_proc + t_re)
+    assert t_que > 0 and t_proc > 223.0
+
+
+def test_queue_term_scales_with_depth():
+    base = predict_queue_ms(EDGE, _task(), NodeState(running=1, queued=8))
+    deep = predict_queue_ms(EDGE, _task(), NodeState(running=1, queued=16))
+    assert deep == pytest.approx(2 * base)
+
+
+def test_curve_ewma_update():
+    c = Curve([1.0, 2.0], [100.0, 200.0], ewma=0.5)
+    c.observe(1.0, 140.0)
+    assert c(1.0) == pytest.approx(120.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.floats(0.5, 20.0))
+def test_property_contention_curve_monotone(x):
+    """The paper's measured warm-container curves are monotone in
+    concurrency; interpolation+extrapolation must preserve that."""
+    app = EDGE.app(FACE)
+    assert app.process_time(29.0, int(np.ceil(x)) + 1) >= \
+        app.process_time(29.0, int(np.ceil(x))) - 1e-6
+
+
+# ------------------------------------------------------------------ admission
+def test_admission_floor_matches_paper():
+    """Paper: constraints under ~200ms are infeasible and must be rejected."""
+    fleet = {"rasp1": RPI, "edge_server": EDGE}
+    floor = min_feasible_ms(fleet, _task(), "rasp1")
+    assert 200.0 < floor < 300.0         # edge's 223ms + transfer
+    ok, _ = admit(fleet, _task(constraint=150.0), "rasp1", margin=1.0)
+    assert not ok
+    ok, _ = admit(fleet, _task(constraint=1000.0), "rasp1", margin=1.0)
+    assert ok
+
+
+# ------------------------------------------------------------------- policies
+def _view(profile, running=0, queued=0, load=0.0):
+    free = max(profile.slots - running - queued, 0)
+    return NodeView(profile=profile,
+                    state=NodeState(running=running, queued=queued,
+                                    cpu_load=load), free_slots=free)
+
+
+def test_dds_local_first():
+    dds = DDS()
+    # idle RPi, loose deadline -> stay local (no scheduling communication)
+    assert dds.decide_source(_task(2000.0), 0.0, _view(RPI)) == "local"
+    # busy RPi, tight deadline -> forward
+    busy = _view(RPI, running=4, queued=12)
+    assert dds.decide_source(_task(700.0), 0.0, busy) == "forward"
+
+
+def test_dds_coordinator_prefers_capable_peer():
+    dds = DDS()
+    peers = {"rasp2": _view(paper_raspberry_pi("rasp2"))}
+    target = dds.decide_coordinator(_task(3000.0), 0.0, _view(EDGE), peers)
+    assert target == "rasp2"            # keep the edge server light
+    # peer with no free slot is skipped
+    peers = {"rasp2": _view(paper_raspberry_pi("rasp2"), running=4)}
+    target = dds.decide_coordinator(_task(3000.0), 0.0, _view(EDGE), peers)
+    assert target == "edge_server"
+
+
+def test_dds_deadline_infeasible_peer_falls_back_to_edge():
+    dds = DDS()
+    peers = {"rasp2": _view(paper_raspberry_pi("rasp2"))}
+    # 400ms budget: RPi needs 597+transfer > 400 -> edge
+    target = dds.decide_coordinator(_task(400.0), 0.0, _view(EDGE), peers)
+    assert target == "edge_server"
+
+
+@settings(max_examples=40, deadline=None)
+@given(constraint=st.floats(250, 20000), running=st.integers(0, 4),
+       queued=st.integers(0, 20))
+def test_property_dds_source_decision_respects_predictor(constraint, running,
+                                                         queued):
+    """DDS goes local iff the predictor says local meets the deadline —
+    the decision is exactly the paper's rule 1."""
+    dds = DDS()
+    view = _view(RPI, running=running, queued=queued)
+    t_local = predict_total_ms(RPI, _task(constraint), view.state, remote=False)
+    want = "local" if t_local <= constraint else "forward"
+    assert dds.decide_source(_task(constraint), 0.0, view) == want
+
+
+# ------------------------------------------------------ simulator: paper claims
+@pytest.fixture(scope="module")
+def fig5_results():
+    out = {}
+    for policy in ["AOR", "AOE", "EODS", "DDS"]:
+        for c in [100, 500, 1000, 2000, 5000]:
+            cfg = SimConfig(num_tasks=50, interval_ms=50, constraint_ms=c,
+                            include_rasp2=False)
+            out[policy, c] = run_sim(make_policy(policy), cfg).num_met
+    return out
+
+
+def test_paper_min_constraint_floor(fig5_results):
+    """No policy satisfies sub-200ms constraints (paper Fig 5 obs. 1)."""
+    for p in ["AOR", "AOE", "EODS", "DDS"]:
+        assert fig5_results[p, 100] == 0
+
+
+def test_paper_edge_beats_device(fig5_results):
+    """AOE >= AOR across constraints (paper obs. 2: powerful nodes win)."""
+    for c in [500, 1000, 2000, 5000]:
+        assert fig5_results["AOE", c] >= fig5_results["AOR", c]
+
+
+def test_paper_distributed_beats_single_node(fig5_results):
+    """EODS and DDS beat both single-node baselines in the constrained
+    regime (paper obs. 4)."""
+    for c in [1000, 2000]:
+        single_best = max(fig5_results["AOR", c], fig5_results["AOE", c])
+        assert fig5_results["EODS", c] >= single_best
+        assert fig5_results["DDS", c] >= single_best - 1
+
+
+def test_paper_more_met_with_looser_constraints(fig5_results):
+    for p in ["AOR", "AOE", "EODS", "DDS"]:
+        counts = [fig5_results[p, c] for c in [500, 1000, 2000, 5000]]
+        assert counts == sorted(counts)
+
+
+def test_paper_longer_interval_helps():
+    """Fig 5a vs 5d: AOR@1000ms goes from near-zero to all-met as the
+    interval stretches 50 -> 500ms."""
+    tight = run_sim(make_policy("AOR"), SimConfig(
+        num_tasks=50, interval_ms=50, constraint_ms=1000,
+        include_rasp2=False)).num_met
+    loose = run_sim(make_policy("AOR"), SimConfig(
+        num_tasks=50, interval_ms=500, constraint_ms=1000,
+        include_rasp2=False)).num_met
+    assert tight <= 5 and loose == 50
+
+
+def test_paper_fig8_extra_device_helps():
+    """DDS + Rasp2 beats DDS alone under every coordinator load (Fig 8)."""
+    for load in [0.0, 0.5, 1.0]:
+        base = run_sim(make_policy("DDS"), SimConfig(
+            num_tasks=300, interval_ms=50, constraint_ms=5000,
+            include_rasp2=False, edge_cpu_load=load)).num_met
+        ext = run_sim(make_policy("DDS"), SimConfig(
+            num_tasks=300, interval_ms=50, constraint_ms=5000,
+            include_rasp2=True, edge_cpu_load=load)).num_met
+        assert ext > base * 1.2, (load, base, ext)
+
+
+def test_paper_fig8_load_hurts():
+    met = [run_sim(make_policy("DDS"), SimConfig(
+        num_tasks=300, interval_ms=50, constraint_ms=5000,
+        include_rasp2=True, edge_cpu_load=l)).num_met
+        for l in [0.0, 0.5, 1.0]]
+    assert met[0] >= met[1] >= met[2]
+    assert met[2] < met[0]
+
+
+def test_udp_loss_drops_tasks():
+    cfg = SimConfig(num_tasks=50, interval_ms=50, constraint_ms=2000,
+                    include_rasp2=False, loss_prob=0.5, seed=3)
+    res = run_sim(make_policy("AOE"), cfg)
+    dropped = sum(1 for r in res.records if r.dropped)
+    assert 10 < dropped < 40            # ~50% of forwarded tasks lost
+    assert res.num_met <= 50 - dropped
+
+
+def test_beyond_dds_edf_sheds_late_work():
+    """DDS_EDF (ours) should match or beat plain DDS when overloaded."""
+    cfg = SimConfig(num_tasks=200, interval_ms=20, constraint_ms=3000)
+    base = run_sim(make_policy("DDS"), cfg).num_met
+    edf = run_sim(make_policy("DDS_EDF"), cfg).num_met
+    assert edf >= base
+
+
+def test_staleness_degrades_decisions():
+    """Beyond-paper: larger heartbeat periods (staler MP tables) should not
+    improve DDS outcomes (generally degrade them)."""
+    met = []
+    for hb in [1.0, 500.0, 5000.0]:
+        cfg = SimConfig(num_tasks=200, interval_ms=30, constraint_ms=3000,
+                        heartbeat_ms=hb)
+        met.append(run_sim(make_policy("DDS"), cfg).num_met)
+    assert met[0] >= met[-1]

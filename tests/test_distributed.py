@@ -1,0 +1,191 @@
+"""Multi-device distribution tests (subprocess with fake host devices):
+spmd flash-decode vs reference, int8 compressed all-reduce, sharded
+train-step parity with single-device, elastic checkpoint restore across
+mesh sizes."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    env.setdefault("REPRO_KERNEL_IMPL", "jnp")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_spmd_decode_matches_reference():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.kernels import ref
+    from repro.serving.spmd_decode import spmd_decode_attention
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    b, s, hq, hkv, d = 4, 32, 8, 2, 16
+    for trial, (idx, window) in enumerate([(5, 0), (20, 8), (31, 0)]):
+        ks = jax.random.split(jax.random.PRNGKey(trial), 5)
+        q = jax.random.normal(ks[0], (b,1,hq,d))
+        kc = jax.random.normal(ks[1], (b,s,hkv,d))
+        vc = jax.random.normal(ks[2], (b,s,hkv,d))
+        nk = jax.random.normal(ks[3], (b,1,hkv,d))
+        nv = jax.random.normal(ks[4], (b,1,hkv,d))
+        pos = jnp.where(jnp.arange(s) < idx, jnp.arange(s), -1).astype(jnp.int32)
+        out, kc2, vc2, pos2 = jax.jit(lambda *a: spmd_decode_attention(
+            mesh, *a, window=window, scale=d**-0.5))(q, kc, vc, nk, nv, pos, idx)
+        kref = kc.at[:, idx].set(nk[:,0]); vref = vc.at[:, idx].set(nv[:,0])
+        pref = pos.at[idx].set(idx)
+        valid = pref >= 0
+        if window: valid &= pref > idx - window
+        exp = ref.decode_mha_masked(q, kref, vref, valid_mask=valid, scale=d**-0.5)
+        assert float(jnp.abs(out-exp).max()) < 1e-5
+        assert float(jnp.abs(kc2-kref).max()) == 0
+        assert int(jnp.abs(pos2-pref).max()) == 0
+    print("OK")
+    """)
+
+
+def test_int8_compressed_allreduce():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.training.compression import make_compressed_allreduce
+    mesh = jax.make_mesh((8,), ("data",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128)) * 0.02
+    fn = make_compressed_allreduce(mesh, "data")
+    out = np.asarray(fn({"g": x})["g"])[0]
+    exact = np.mean(np.asarray(x), axis=0)
+    # int8 quantization error is bounded by ~ (amax/127) per shard
+    tol = float(np.abs(np.asarray(x)).max()) / 127.0 + 1e-6
+    assert np.abs(out - exact).max() <= tol, np.abs(out - exact).max()
+    print("OK")
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    """The same train step on a 4x2 mesh and on 1 device must produce the
+    same loss and (numerically) the same updated params."""
+    run_py("""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.common.config import TrainConfig
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import parallel_config_for
+    from repro.sharding import specs as sp
+    from repro.training import steps as steps_lib
+
+    cfg = get_smoke_config("granite-8b").replace(param_dtype=jnp.float32,
+                                                 dtype=jnp.float32)
+    tc = TrainConfig(total_steps=10)
+    key = jax.random.PRNGKey(0)
+    state = steps_lib.init_train_state(key, cfg)
+    tokens = jax.random.randint(key, (8, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens,
+             "mask": jnp.ones((8, 32), jnp.float32)}
+    step = steps_lib.make_train_step(cfg, tc)
+
+    # single device
+    s1, m1 = jax.jit(step)(state, batch)
+
+    # sharded
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    pc = parallel_config_for(mesh)
+    specs = sp.state_specs(jax.eval_shape(lambda: state), mesh, pc)
+    st_sh = sp.named(mesh, specs)
+    bspec = sp.named(mesh, {k: P("data", None) for k in batch})
+    fn = jax.jit(step, in_shardings=(st_sh, bspec), out_shardings=(st_sh, None))
+    s2, m2 = fn(jax.device_put(state, st_sh),
+                {k: jax.device_put(v, bspec[k]) for k, v in batch.items()})
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                     s1["params"], s2["params"])
+    assert max(jax.tree.leaves(d)) < 1e-4
+    print("OK")
+    """)
+
+
+def test_elastic_restore_across_mesh_sizes(tmp_path):
+    """Save on an 8-device (4,2) mesh, restore onto (2,2) using 4 devices —
+    the elastic rescale path (checkpoint is mesh-agnostic)."""
+    run_py(f"""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.common.config import ParallelConfig
+    from repro.configs import get_smoke_config
+    from repro.ft.elastic import plan_rescale, reshard_state
+    from repro.launch.mesh import parallel_config_for
+    from repro.sharding import specs as sp
+    from repro.training import steps as steps_lib
+
+    cfg = get_smoke_config("qwen3-4b")
+    state = steps_lib.init_train_state(jax.random.PRNGKey(0), cfg)
+    mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+    specs8 = sp.state_specs(jax.eval_shape(lambda: state), mesh8,
+                            parallel_config_for(mesh8))
+    state8 = jax.device_put(state, sp.named(mesh8, specs8))
+    mgr = CheckpointManager({str(tmp_path)!r})
+    mgr.save(1, state8)
+
+    plan = plan_rescale(ParallelConfig(dp=4, tp=2), available_devices=4)
+    assert plan.new_tp == 2 and plan.new_dp == 2
+    mesh4 = jax.make_mesh((plan.new_dp, plan.new_tp), ("data", "model"))
+    pc4 = parallel_config_for(mesh4)
+    template = jax.eval_shape(lambda: state)
+    restored = mgr.restore(1, template)
+    from repro.common.tree import tree_paths
+    spec_map = dict(tree_paths(sp.state_specs(template, mesh4, pc4)))
+    restored = reshard_state(restored, mesh4, lambda p: spec_map[p])
+    from repro.common.tree import tree_allclose
+    assert tree_allclose(jax.device_get(state8), jax.device_get(restored))
+    print("OK")
+    """)
+
+
+def test_gpipe_pipeline_matches_forward():
+    """SPMD GPipe over a 4-stage mesh must equal the plain forward."""
+    run_py("""
+    import jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.training.pipeline import pipeline_forward
+    cfg = get_smoke_config("granite-8b").replace(
+        num_layers=4, param_dtype=jnp.float32, dtype=jnp.float32)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                cfg.vocab_size)
+    mesh = jax.make_mesh((4,), ("stage",))
+    got = jax.jit(lambda p, t: pipeline_forward(
+        mesh, "stage", p, t, cfg, num_microbatches=4))(params, tokens)
+    want, _ = M.forward(params, tokens, cfg)
+    assert float(jnp.abs(got - want).max()) < 1e-4
+    print("OK")
+    """, devices=4)
+
+
+def test_gpipe_heterogeneous_periods():
+    """Pipeline a gemma3-style (5 local + 1 global) period stack."""
+    run_py("""
+    import jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.training.pipeline import pipeline_forward
+    cfg = get_smoke_config("gemma3-27b").replace(
+        num_layers=12, param_dtype=jnp.float32, dtype=jnp.float32)  # 2 periods
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                cfg.vocab_size)
+    mesh = jax.make_mesh((2,), ("stage",))
+    got = jax.jit(lambda p, t: pipeline_forward(
+        mesh, "stage", p, t, cfg, num_microbatches=2))(params, tokens)
+    want, _ = M.forward(params, tokens, cfg)
+    assert float(jnp.abs(got - want).max()) < 1e-4
+    print("OK")
+    """, devices=2)

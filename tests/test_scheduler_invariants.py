@@ -1,0 +1,85 @@
+"""Hypothesis property tests on system-level scheduler invariants:
+conservation (every task finishes exactly once), causality (no finish
+before create + minimum processing), monotone placement sanity — swept
+over random workloads and policies."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import make_policy
+from repro.core.profile import FACE
+from repro.core.simulator import SimConfig, run_sim
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+
+POLICIES = ["AOR", "AOE", "EODS", "DDS", "DDS_EDF", "DDS_P2C", "JSQ"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(policy=st.sampled_from(POLICIES),
+       n=st.integers(5, 60),
+       interval=st.sampled_from([10.0, 50.0, 200.0]),
+       constraint=st.sampled_from([300.0, 1000.0, 5000.0]),
+       load=st.sampled_from([0.0, 0.5, 1.0]),
+       seed=st.integers(0, 3))
+def test_property_conservation_and_causality(policy, n, interval, constraint,
+                                             load, seed):
+    """For ANY workload/policy (no loss): every task finishes exactly once,
+    never before creation + the fleet's fastest possible processing time."""
+    cfg = SimConfig(num_tasks=n, interval_ms=interval,
+                    constraint_ms=constraint, edge_cpu_load=load, seed=seed)
+    res = run_sim(make_policy(policy), cfg)
+    assert len(res.records) == n
+    fastest = 100.0         # << any profiled processing time in the fleet
+    for r in res.records:
+        if r.dropped:       # EDF shedding accounts late work as dropped
+            assert make_policy(policy).drop_late
+            continue
+        assert r.finished_ms < float("inf"), "task lost"
+        assert r.latency_ms >= fastest, (policy, r.task.task_id, r.latency_ms)
+        assert r.node in ("rasp1", "rasp2", "edge_server")
+
+
+@settings(max_examples=10, deadline=None)
+@given(policy=st.sampled_from(["AOR", "AOE", "EODS"]),
+       seed=st.integers(0, 5))
+def test_property_static_policies_placement_exact(policy, seed):
+    """Static policies must place exactly where they promise."""
+    cfg = SimConfig(num_tasks=20, interval_ms=100, constraint_ms=5000,
+                    seed=seed)
+    res = run_sim(make_policy(policy), cfg)
+    places = res.placement_counts()
+    if policy == "AOR":
+        assert places == {"rasp1": 20}
+    elif policy == "AOE":
+        assert places == {"edge_server": 20}
+    else:
+        assert places.get("rasp1", 0) == 10 and \
+            places.get("edge_server", 0) == 10
+
+
+@settings(max_examples=15, deadline=None)
+@given(loss=st.floats(0.0, 0.9), seed=st.integers(0, 3))
+def test_property_loss_accounting_closed(loss, seed):
+    """dropped + finished == total under any UDP loss rate."""
+    cfg = SimConfig(num_tasks=40, interval_ms=50, constraint_ms=3000,
+                    loss_prob=loss, seed=seed)
+    res = run_sim(make_policy("AOE"), cfg)
+    dropped = sum(1 for r in res.records if r.dropped)
+    finished = sum(1 for r in res.records if r.finished_ms < float("inf"))
+    assert dropped + finished == 40
+
+
+# ------------------------------------------------- fused rmsnorm kernel
+@pytest.mark.parametrize("rows,d", [(64, 128), (100, 64), (3, 256)])
+def test_rmsnorm_kernel_vs_reference(rows, d):
+    import jax
+    import jax.numpy as jnp
+    from repro.models.layers import rmsnorm as ref_rmsnorm
+
+    key = jax.random.PRNGKey(rows * d)
+    x = jax.random.normal(key, (2, rows, d), jnp.float32)
+    scale = jax.random.normal(jax.random.PRNGKey(1), (d,)) * 0.1
+    got = rmsnorm_kernel(x, scale, interpret=True)
+    want = ref_rmsnorm({"scale": scale}, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,147 @@
+"""Training stack: optimizer math, schedules, grad accumulation, compression,
+and an end-to-end loss-goes-down run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import TrainConfig
+from repro.configs import get_smoke_config
+from repro.launch.train import train_loop
+from repro.training import optimizer as opt
+from repro.training import steps as steps_lib
+from repro.training.schedules import make_schedule
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_matches_manual_step():
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    tc = TrainConfig(learning_rate=0.1, weight_decay=0.0, beta1=0.9,
+                     beta2=0.999, eps=1e-8)
+    state = opt.adamw_init(params)
+    new_p, new_s = opt.adamw_update(grads, state, params, 0.1, tc)
+    g = np.asarray([0.1, 0.2, -0.3])
+    m = 0.1 * g
+    v = 0.001 * g * g
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    expect = np.asarray([1.0, -2.0, 3.0]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-5)
+    assert int(new_s["step"]) == 1
+
+
+def test_weight_decay_is_decoupled():
+    params = {"w": jnp.asarray([10.0])}
+    grads = {"w": jnp.asarray([0.0])}
+    tc = TrainConfig(learning_rate=0.1, weight_decay=0.1)
+    state = opt.adamw_init(params)
+    new_p, _ = opt.adamw_update(grads, state, params, 0.1, tc)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), [10.0 - 0.1 * 0.1 * 10.0])
+
+
+def test_global_norm_clip():
+    grads = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = opt.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    total = np.sqrt(float(clipped["a"][0]) ** 2 + float(clipped["b"][0]) ** 2)
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
+                max_size=64))
+def test_property_int8_quantization_bounded_error(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = opt.quantize_int8(x)
+    err = np.abs(np.asarray(opt.dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6     # half-ULP of the int8 grid
+
+
+def test_error_feedback_preserves_signal():
+    """Sum over steps of EF-compressed grads ~ sum of true grads."""
+    rng = np.random.default_rng(0)
+    g_true = [rng.standard_normal(32).astype(np.float32) * 0.01
+              for _ in range(50)]
+    ef = {"g": jnp.zeros(32)}
+    total = np.zeros(32)
+    for g in g_true:
+        deq, ef = opt.compress_grads_ef({"g": jnp.asarray(g)}, ef)
+        total += np.asarray(deq["g"])
+    expect = np.sum(g_true, axis=0)
+    # residual error is bounded by the final EF buffer
+    np.testing.assert_allclose(total + np.asarray(ef["g"]), expect, atol=1e-4)
+
+
+# ------------------------------------------------------------------ schedules
+def test_wsd_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, schedule="wsd", warmup_steps=10,
+                     total_steps=100, wsd_decay_frac=0.2)
+    fn = make_schedule(tc)
+    lrs = [float(fn(s)) for s in range(100)]
+    assert lrs[0] < lrs[9]                          # warmup
+    assert lrs[20] == pytest.approx(1e-3)           # stable plateau
+    assert lrs[75] == pytest.approx(1e-3)           # still stable
+    assert lrs[99] < 2e-4                           # sharp final decay
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_cosine_schedule_endpoints():
+    tc = TrainConfig(learning_rate=1e-3, schedule="cosine", warmup_steps=5,
+                     total_steps=50)
+    fn = make_schedule(tc)
+    assert float(fn(4)) == pytest.approx(1e-3, rel=0.01)
+    assert float(fn(49)) < 1e-4
+
+
+# -------------------------------------------------------------- grad accum
+def test_microbatch_grad_accum_matches_full_batch():
+    cfg = get_smoke_config("granite-8b").replace(param_dtype=jnp.float32,
+                                                 dtype=jnp.float32)
+    tokens = jax.random.randint(KEY, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens,
+             "mask": jnp.ones((4, 32), jnp.float32)}
+    state = steps_lib.init_train_state(KEY, cfg)
+
+    tc1 = TrainConfig(microbatches=1, total_steps=10)
+    tc2 = TrainConfig(microbatches=2, total_steps=10)
+    s1, m1 = jax.jit(steps_lib.make_train_step(cfg, tc1))(state, batch)
+    s2, m2 = jax.jit(steps_lib.make_train_step(cfg, tc2))(state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    deltas = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                          s1["params"], s2["params"])
+    assert max(jax.tree.leaves(deltas)) < 5e-5
+
+
+# ------------------------------------------------------------------ e2e train
+def test_loss_decreases_end_to_end(tmp_path):
+    cfg = get_smoke_config("qwen3-4b")
+    tc = TrainConfig(learning_rate=1e-3, total_steps=60, warmup_steps=5,
+                     schedule="cosine")
+    out = train_loop(cfg, tc, global_batch=4, seq_len=64, steps=60,
+                     log_every=0)
+    first = np.mean([h["loss"] for h in out["history"][:5]])
+    last = np.mean([h["loss"] for h in out["history"][-5:]])
+    assert last < first - 0.15, (first, last)
+
+
+def test_train_resume_bitexact(tmp_path):
+    """20 straight steps == 10 steps + checkpoint + restore + 10 steps."""
+    cfg = get_smoke_config("granite-8b").replace(param_dtype=jnp.float32,
+                                                 dtype=jnp.float32)
+    tc = TrainConfig(learning_rate=1e-3, total_steps=20, warmup_steps=2)
+    d1 = str(tmp_path / "a")
+    out_straight = train_loop(cfg, tc, global_batch=2, seq_len=32, steps=20,
+                              log_every=0)
+    train_loop(cfg, tc, global_batch=2, seq_len=32, steps=10,
+               ckpt_dir=d1, log_every=0)
+    out_resumed = train_loop(cfg, tc, global_batch=2, seq_len=32, steps=10,
+                             ckpt_dir=d1, resume=True, log_every=0)
+    a = jax.tree.leaves(out_straight["state"]["params"])
+    b = jax.tree.leaves(out_resumed["state"]["params"])
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-5, rtol=1e-5)
