@@ -1,0 +1,22 @@
+"""Version compatibility for jax APIs this repo uses.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (where the
+replication-check kwarg is ``check_rep``) to ``jax.shard_map`` (where it is
+``check_vma``).  Resolve whichever this jax ships so the distributed paths
+run on both sides of the move.
+"""
+from __future__ import annotations
+
+import jax
+
+_SENTINEL = object()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=_SENTINEL):
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is _SENTINEL else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {} if check_vma is _SENTINEL else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -14,7 +14,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.admission import admit
 from repro.core.latency import NodeState, Task
@@ -50,6 +50,9 @@ class Fleet:
         self._publishers: Dict[str, UpdateProfilePublisher] = {}
         self.stats = FleetStats()
         self._lock = threading.Lock()
+        # admission reads the fleet's (static) profiles on every submit;
+        # cache the dict and invalidate on membership changes
+        self._fleet_profiles: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------ lifecycle
     def add_worker(self, worker: Worker, link: Optional[Link] = None) -> None:
@@ -58,19 +61,24 @@ class Fleet:
         ok, why = certify(worker.profile, self.required_apps)
         if not ok:
             raise ValueError(f"certification failed for {worker.name}: {why}")
-        self.workers[worker.name] = worker
-        self.links[worker.name] = link or Link(worker.profile.link)
         pub = UpdateProfilePublisher(worker.name, worker.profile,
                                      worker.state, self.table,
                                      self.heartbeat_ms)
-        self._publishers[worker.name] = pub
+        with self._lock:
+            self.workers[worker.name] = worker
+            self.links[worker.name] = link or Link(worker.profile.link)
+            self._publishers[worker.name] = pub
+            self._fleet_profiles = None
 
     def remove_worker(self, name: str) -> None:
         """Elastic scale-in / failure handling: unregister and stop."""
-        pub = self._publishers.pop(name, None)
+        with self._lock:
+            pub = self._publishers.pop(name, None)
+            w = self.workers.pop(name, None)
+            self.links.pop(name, None)
+            self._fleet_profiles = None
         if pub:
             pub.stop()
-        w = self.workers.pop(name, None)
         if w:
             w.stop()
         self.table.remove(name)
@@ -105,7 +113,12 @@ class Fleet:
         with self._lock:
             self.stats.submitted += 1
         if self.admission_margin > 0:
-            fleet_profiles = {n: w.profile for n, w in self.workers.items()}
+            with self._lock:
+                fleet_profiles = self._fleet_profiles
+                if fleet_profiles is None:
+                    fleet_profiles = {n: w.profile
+                                      for n, w in self.workers.items()}
+                    self._fleet_profiles = fleet_profiles
             ok, _ = admit(fleet_profiles, task, self.source_name,
                           self.admission_margin)
             if not ok:

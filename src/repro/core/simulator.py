@@ -19,7 +19,6 @@ from __future__ import annotations
 import heapq
 import itertools
 import random
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -87,7 +86,10 @@ class _SimNode:
         self.profile = profile
         self.name = profile.device_id
         self.running = 0
-        self.waiting: deque = deque()        # (task, enqueue_time)
+        # priority heap of (key, seq, task, enqueue_time): key is arrival
+        # time for FIFO, absolute deadline for EDF — O(log n) insert/pop
+        # instead of re-sorting the whole queue on every insert
+        self.waiting: List = []
         self.cpu_load = profile.cpu_load
 
     @property
@@ -199,11 +201,11 @@ class Simulator:
         if node.free_slots > 0:
             self._start(now, node_name, task)
         else:
-            node.waiting.append((task, now))
             if self.policy.queue_discipline == "edf":
-                node.waiting = deque(sorted(
-                    node.waiting,
-                    key=lambda it: it[0].created_ms + it[0].constraint_ms))
+                key = task.created_ms + task.constraint_ms   # abs deadline
+            else:
+                key = now                                    # FIFO arrival
+            heapq.heappush(node.waiting, (key, next(self._seq), task, now))
 
     def _start(self, now: float, node_name: str, task: Task) -> None:
         node = self.nodes[node_name]
@@ -224,7 +226,7 @@ class Simulator:
             rec.finished_ms = now + node.profile.link.transfer_time(task.result_kb)
         # pull next waiting task (container goes back to the q queue)
         while node.waiting:
-            nxt, enq = node.waiting.popleft()
+            _, _, nxt, enq = heapq.heappop(node.waiting)
             if self.policy.drop_late and \
                now - nxt.created_ms > nxt.constraint_ms:
                 # shed late work — account it as dropped, not lost

@@ -10,7 +10,10 @@ HBM->VMEM once.  Design:
     M dimension: q tile is (q_per_kv, d), so granite's 4 q-heads/kv-head
     share each streamed KV tile.
   * cache_len / sliding-window masking via iota compare against the
-    (dynamic) current length.
+    (dynamic) current length.  ``cache_len`` is a per-sequence ``(B,)``
+    vector in SMEM: every batch lane masks against ITS OWN length, so a
+    continuous-batching decode step can mix lanes at arbitrary positions
+    (new arrivals join mid-stream without flushing the batch).
 
 Validated on CPU with ``interpret=True`` against ``ref.decode_mha_reference``.
 """
@@ -23,13 +26,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 NEG_INF = -1e30
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                    *, scale, window, softcap, block_k, num_kv_blocks):
     ki = pl.program_id(2)
-    cache_len = len_ref[0]
+    cache_len = len_ref[pl.program_id(0)]       # this lane's KV length
 
     @pl.when(ki == 0)
     def _init():
@@ -37,29 +42,39 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0, :, :].astype(jnp.float32)          # (q_per_kv, d)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (block_k, d)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if softcap:
-        s = softcap * jnp.tanh(s / softcap)
-
-    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = kpos < cache_len
+    # Whole KV tiles beyond this lane's length (and, with a sliding window,
+    # wholly before it) contribute nothing: skip their FLOPs entirely.  With
+    # per-lane lengths this is where batching wins — a short lane does not
+    # pay for the longest lane's cache.
+    lane_live = ki * block_k < cache_len
     if window > 0:
-        mask &= kpos > cache_len - 1 - window
-    s = jnp.where(mask, s, NEG_INF)
+        lane_live &= (ki + 1) * block_k > cache_len - 1 - window
 
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+    @pl.when(lane_live)
+    def _accumulate():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)      # (q_per_kv, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (block_k, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < cache_len
+        if window > 0:
+            mask &= kpos > cache_len - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
 
     @pl.when(ki == num_kv_blocks - 1)
     def _done():
@@ -69,7 +84,10 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 def decode_attention(q, k_cache, v_cache, *, cache_len, window=0, scale=None,
                      softcap=0.0, block_k=256, interpret=False):
-    """q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D) -> (B, 1, Hq, D)."""
+    """q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D) -> (B, 1, Hq, D).
+
+    ``cache_len``: scalar, or a ``(B,)`` int vector of per-lane KV lengths
+    (continuous batching: lanes decode at independent positions)."""
     b, _, hq, d = q.shape
     smax, hkv = k_cache.shape[1], k_cache.shape[2]
     rep = hq // hkv
@@ -84,7 +102,8 @@ def decode_attention(q, k_cache, v_cache, *, cache_len, window=0, scale=None,
 
     # (B, 1, Hq, D) -> (B, Hkv, rep, D): group q heads by kv head
     qg = q[:, 0].reshape(b, hkv, rep, d)
-    cache_len_arr = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    cache_len_arr = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, window=window, softcap=softcap,
@@ -106,7 +125,7 @@ def decode_attention(q, k_cache, v_cache, *, cache_len, window=0, scale=None,
             pltpu.VMEM((rep, 1), jnp.float32),
             pltpu.VMEM((rep, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -45,7 +45,10 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
 
 def decode_attention(q, k_cache, v_cache, *, cache_len, window=0, scale=None,
                      softcap=0.0):
-    """(B,1,H,D) + (B,Smax,Hkv,D) caches -> (B,1,H,D)."""
+    """(B,1,H,D) + (B,Smax,Hkv,D) caches -> (B,1,H,D).
+
+    ``cache_len`` is a scalar or a per-lane ``(B,)`` vector; both backends
+    mask each batch lane against its own length."""
     impl = _impl()
     if impl.startswith("pallas"):
         from repro.kernels import decode_attention as dk

@@ -62,7 +62,12 @@ def mha_reference(q, k, v, *, causal=True, window=0, scale=None, softcap=0.0,
 
 def decode_mha_reference(q, k_cache, v_cache, *, cache_len, window=0,
                          scale=None, softcap=0.0):
-    """q: (B,1,Hq,D); caches: (B,Smax,Hkv,D). Mask = [cache_len-window, cache_len)."""
+    """q: (B,1,Hq,D); caches: (B,Smax,Hkv,D). Mask = [cache_len-window, cache_len).
+
+    ``cache_len`` may be a scalar (all lanes at the same position) or a
+    ``(B,)`` vector of per-lane lengths (continuous batching: every lane of
+    the decode batch is at its own position in its own KV history).
+    """
     b, _, hq, d = q.shape
     smax = k_cache.shape[1]
     scale = scale if scale is not None else d ** -0.5
@@ -73,10 +78,11 @@ def decode_mha_reference(q, k_cache, v_cache, *, cache_len, window=0,
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
     j = jnp.arange(smax)
-    m = j < cache_len
+    cl = jnp.asarray(cache_len, jnp.int32).reshape(-1, 1)    # (1,1) or (B,1)
+    m = j[None, :] < cl                                      # (1|B, Smax)
     if window > 0:
-        m &= j > cache_len - 1 - window
-    logits = jnp.where(m[None, None, None, :], logits, NEG_INF)
+        m &= j[None, :] > cl - 1 - window
+    logits = jnp.where(m[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -85,8 +91,8 @@ def decode_mha_reference(q, k_cache, v_cache, *, cache_len, window=0,
 def decode_mha_masked(q, k_cache, v_cache, *, valid_mask, scale=None,
                       softcap=0.0):
     """Decode attention over a ring-buffer cache: attend to slots where
-    ``valid_mask`` ((Smax,) bool) is set.  Keys are stored pre-roped at their
-    absolute positions so slot order is irrelevant.
+    ``valid_mask`` ((Smax,) or per-lane (B, Smax) bool) is set.  Keys are
+    stored pre-roped at their absolute positions so slot order is irrelevant.
 
     The cache is consumed in its storage dtype (bf16) with f32 MXU
     accumulation (preferred_element_type) — upcasting the cache itself would
@@ -100,10 +106,33 @@ def decode_mha_masked(q, k_cache, v_cache, *, valid_mask, scale=None,
                         preferred_element_type=jnp.float32) * scale
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
-    logits = jnp.where(valid_mask[None, None, None, :], logits, NEG_INF)
+    vm = valid_mask[None] if valid_mask.ndim == 1 else valid_mask
+    logits = jnp.where(vm[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def mha_cache_masked(q, k_cache, v_cache, *, mask, scale=None, softcap=0.0):
+    """Multi-query attention against a (partially filled) KV cache with an
+    explicit per-query mask — the chunked-prefill oracle.
+
+    q: (B,C,Hq,D) chunk queries; caches: (B,T,Hkv,D); mask: (B,C,T) bool
+    (True = attend).  f32 math throughout, mirroring ``mha_reference`` so
+    chunked prefill is numerically interchangeable with whole-prompt prefill.
+    """
+    b, c, hq, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k_cache, hq)
+    v = _gqa_expand(v_cache, hq)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)
 
 

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _ssd_kernel(xb_ref, ld_ref, b_ref, c_ref, y_ref, h_scr, *, chunk):
     ci = pl.program_id(2)
@@ -94,7 +96,7 @@ def ssd(x, dt, a_log, b_mat, c_mat, d_skip=None, *, chunk=128, interpret=False):
         out_specs=pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -97,7 +97,9 @@ def init_block_cache(cfg: ModelConfig, kind: str, attn_kind: str,
         return {
             "k": jnp.zeros((batch, n, hkv, hd), cfg.dtype),
             "v": jnp.zeros((batch, n, hkv, hd), cfg.dtype),
-            "pos": jnp.full((n,), -1, jnp.int32),
+            # per-lane ring-slot absolute positions (-1 = empty): lanes of a
+            # continuous batch sit at independent depths
+            "pos": jnp.full((batch, n), -1, jnp.int32),
         }
     if kind == CROSS:
         t = cfg.num_image_tokens
@@ -116,14 +118,21 @@ def init_block_cache(cfg: ModelConfig, kind: str, attn_kind: str,
 # --------------------------------------------------------------------- decode
 def apply_block_decode(p, x, cache, cfg: ModelConfig, kind: str, attn_kind: str,
                        *, cache_index, num_groups: int = 1):
-    """x: (B, 1, D).  Returns (y, new_cache, aux)."""
+    """x: (B, 1, D).  Returns (y, new_cache, aux).
+
+    ``cache_index`` is a scalar (all lanes at the same position) or a
+    per-lane ``(B,)`` vector: lane b inserts its KV at ``cache_index[b]``
+    and masks against its own length — the continuous-batching decode path.
+    """
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     new_cache = cache
     if kind == ATTN:
+        b = x.shape[0]
         cache_index = jnp.asarray(cache_index, jnp.int32)
+        idx = jnp.broadcast_to(cache_index, (b,))
         n = cache["k"].shape[1]
-        # project + rope at absolute position
-        positions = jnp.full((x.shape[0], 1), cache_index, jnp.int32)
+        # project + rope at each lane's absolute position
+        positions = idx[:, None]                               # (B, 1)
         q, k, v = attn_lib._project_qkv(p["attn"], h, cfg, positions, attn_kind)
         window = attn_lib._window_for(cfg, attn_kind)
         scale = cfg.attn_scale or cfg.resolved_head_dim ** -0.5
@@ -131,6 +140,10 @@ def apply_block_decode(p, x, cache, cfg: ModelConfig, kind: str, attn_kind: str,
         from repro.sharding import context as shctx
         serving = shctx.get_serving_mesh()
         if serving is not None:
+            if cache_index.ndim:
+                raise NotImplementedError(
+                    "per-lane cache_index with a serving mesh (spmd decode) "
+                    "is a follow-on; pass a scalar cache_index")
             # explicitly distributed split-S flash-decode (§Perf iter 2)
             from repro.serving.spmd_decode import spmd_decode_attention
             mesh, b_ax, s_ax = serving
@@ -139,16 +152,16 @@ def apply_block_decode(p, x, cache, cfg: ModelConfig, kind: str, attn_kind: str,
                 cache_index, window=window, scale=scale,
                 softcap=cfg.logit_softcap, batch_axis=b_ax, seq_axis=s_ax)
         else:
-            slot = jax.lax.rem(cache_index, n)
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-            pos = jax.lax.dynamic_update_slice(
-                cache["pos"], cache_index[None].astype(jnp.int32), (slot,))
+            slots = jax.lax.rem(idx, n)                        # (B,)
+            lanes = jnp.arange(b)
+            k_cache = cache["k"].at[lanes, slots].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[lanes, slots].set(
+                v[:, 0].astype(cache["v"].dtype))
+            pos = cache["pos"].at[lanes, slots].set(idx)       # (B, n)
             valid = pos >= 0
             if window > 0:
-                valid &= pos > cache_index - window
+                valid &= pos > idx[:, None] - window
             out = ref.decode_mha_masked(
                 q, k_cache, v_cache, valid_mask=valid, scale=scale,
                 softcap=cfg.logit_softcap)
@@ -189,7 +202,7 @@ def apply_block_prefill(p, x, cfg: ModelConfig, kind: str, attn_kind: str, *,
         slots = src_pos % n
         kc = cache["k"].at[:, slots].set(k[:, s - take:].astype(cache["k"].dtype))
         vc = cache["v"].at[:, slots].set(v[:, s - take:].astype(cache["v"].dtype))
-        pc = cache["pos"].at[slots].set(src_pos.astype(jnp.int32))
+        pc = cache["pos"].at[:, slots].set(src_pos.astype(jnp.int32))
         new_cache = {"k": kc, "v": vc, "pos": pc}
     elif kind == CROSS:
         y, (k, v) = attn_lib.cross_attention(p["attn"], h, enc, cfg)
@@ -203,5 +216,48 @@ def apply_block_prefill(p, x, cfg: ModelConfig, kind: str, attn_kind: str, *,
         x = x + y
     else:
         raise ValueError(kind)
+    x, aux = _channel_mix(p, x, cfg, kind, num_groups)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------ chunked prefill
+def apply_block_prefill_chunk(p, x, cache, cfg: ModelConfig, kind: str,
+                              attn_kind: str, *, start, num_groups: int = 1):
+    """Extend an existing decode cache with a prompt chunk.
+
+    x: (B, C, D) — the chunk's embeddings at absolute positions
+    [start, start+C).  The chunk's KV lands in the cache's ring slots and
+    queries attend causally over everything written so far, so a long
+    prompt can be prefilled in bounded pieces interleaved between decode
+    steps of OTHER lanes (continuous batching's anti-stall).  Attention-only
+    blocks: recurrent mixers (SSD/RG-LRU) carry chunk-to-chunk state that
+    the block cache API does not thread yet — callers gate on
+    ``model.supports_chunked_prefill``.
+    """
+    if kind != ATTN:
+        raise NotImplementedError(
+            f"chunked prefill supports attention blocks only, got {kind!r}")
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    b, c, _ = x.shape
+    n = cache["k"].shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(c, dtype=jnp.int32)         # (C,)
+    q, k, v = attn_lib._project_qkv(p["attn"], h, cfg, positions, attn_kind)
+    slots = jax.lax.rem(positions, n)
+    kc = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+    vc = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+    pos = cache["pos"].at[:, slots].set(positions)
+    window = attn_lib._window_for(cfg, attn_kind)
+    # (B, C, n): valid slot, causal vs the query's absolute position, window
+    m = (pos[:, None, :] >= 0) & (pos[:, None, :] <= positions[None, :, None])
+    if window > 0:
+        m &= pos[:, None, :] > positions[None, :, None] - window
+    out = ref.mha_cache_masked(
+        q, kc, vc, mask=m,
+        scale=cfg.attn_scale or cfg.resolved_head_dim ** -0.5,
+        softcap=cfg.logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(x.dtype))
+    x = x + y
+    new_cache = {"k": kc, "v": vc, "pos": pos}
     x, aux = _channel_mix(p, x, cfg, kind, num_groups)
     return x, new_cache, aux

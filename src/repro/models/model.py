@@ -159,7 +159,11 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, Any]:
 def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
                 *, num_groups: int = 1) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """tokens: (B, 1) int32 (or (B, 1, d) embeddings).  One decode step:
-    inserts KV at ``cache_index`` and predicts the next token's logits."""
+    inserts KV at ``cache_index`` and predicts the next token's logits.
+
+    ``cache_index`` is a scalar (all lanes aligned) or a per-lane ``(B,)``
+    vector — the continuous-batching path, where every lane of the batch
+    decodes at its own position in its own KV history."""
     if tokens.ndim == 2:
         x = lyr.embed(params["embed"], tokens, cfg)
     else:
@@ -205,6 +209,96 @@ def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
     x = lyr.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lyr.logits_head(params["embed"], x, cfg, params.get("head"))
     return logits, {"periods": new_periods, "tail": tuple(new_tail)}
+
+
+# ------------------------------------------------------------ chunked prefill
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill extends a live decode cache one prompt piece at a
+    time.  Supported for pure global-attention stacks: recurrent mixers
+    (SSD/RG-LRU) would need chunk-to-chunk state threading, and sliding
+    windows would need ring-wrap-safe chunk scatter (both ROADMAP items)."""
+    from repro.common.config import GLOBAL
+    if any(k != ATTN for k in cfg.layer_kinds()):
+        return False
+    return all(a == GLOBAL for a in cfg.attn_kinds()) or not cfg.sliding_window
+
+
+def prefill_chunk(params, cache, tokens, start, cfg: ModelConfig,
+                  *, num_groups: int = 1, return_all_logits: bool = False
+                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Extend ``cache`` with prompt chunk ``tokens`` ((B, C) int32) whose
+    first token sits at absolute position ``start``.  Returns last-position
+    logits (B, 1, V) — or all C positions' logits with
+    ``return_all_logits`` (callers padding the final chunk to a fixed
+    compile shape index the last REAL position) — and the extended cache.
+    Start from a fresh ``init_cache(cfg, B, capacity)`` with ``start=0``;
+    successive calls advance ``start`` by the previous chunk length.  This
+    is the serving engine's anti-stall: a long prompt prefills in bounded
+    pieces interleaved between other lanes' decode steps."""
+    if tokens.ndim == 2:
+        x = lyr.embed(params["embed"], tokens, cfg)
+    else:
+        x = tokens.astype(cfg.dtype)
+    start = jnp.asarray(start, jnp.int32)
+    period_kinds = cfg.period_kinds()
+
+    def period_body(x, slot_params_and_cache):
+        slot_params, slot_caches = slot_params_and_cache
+        new_caches = []
+        for si, (kind, akind) in enumerate(period_kinds):
+            x, nc, _ = blk.apply_block_prefill_chunk(
+                slot_params[si], x, slot_caches[si], cfg, kind, akind,
+                start=start, num_groups=num_groups)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if cfg.num_periods > 0 and cfg.scan_layers:
+        x, new_periods = jax.lax.scan(
+            period_body, x, (params["periods"], cache["periods"]))
+    else:
+        new_list = []
+        for r in range(cfg.num_periods):
+            sp = tuple(jax.tree.map(lambda a: a[r], t) for t in params["periods"])
+            sc = tuple(jax.tree.map(lambda a: a[r], t) for t in cache["periods"])
+            x, ncs = period_body(x, (sp, sc))
+            new_list.append(ncs)
+        if new_list:
+            new_periods = tuple(
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[nl[s] for nl in new_list])
+                for s in range(len(period_kinds)))
+        else:
+            new_periods = cache["periods"]
+
+    new_tail = []
+    for ti, (kind, akind) in enumerate(cfg.tail_kinds()):
+        x, nc, _ = blk.apply_block_prefill_chunk(
+            params["tail"][ti], x, cache["tail"][ti], cfg, kind, akind,
+            start=start, num_groups=num_groups)
+        new_tail.append(nc)
+
+    x = lyr.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    sel = x if return_all_logits else x[:, -1:]
+    logits = lyr.logits_head(params["embed"], sel, cfg, params.get("head"))
+    return logits, {"periods": new_periods, "tail": tuple(new_tail)}
+
+
+def trim_cache(cache, length) -> Dict[str, Any]:
+    """Invalidate cache entries at positions >= ``length``: per-lane ring
+    ``pos`` slots written by a PADDED prefill chunk read as empty again
+    (their stale K/V is thereby masked, and decode overwrites those slots
+    as real tokens arrive)."""
+    from jax.tree_util import tree_map_with_path
+
+    length = jnp.asarray(length, jnp.int32)
+
+    def f(path, leaf):
+        key = getattr(path[-1], "key", None) if path else None
+        if key == "pos":
+            return jnp.where(leaf < length, leaf, -1)
+        return leaf
+
+    return tree_map_with_path(f, cache)
 
 
 # --------------------------------------------------------------------- prefill

@@ -8,10 +8,25 @@ The paper's architecture, realized for model serving:
     cold-start on the request path).
   * the **router** is the paper's two-level DDS: requests carry SLO
     deadlines; placement uses profile-predicted T_task over the replicas'
-    telemetry (queue depth, in-flight decodes), local-first when the
+    telemetry (queue depth, lane occupancy), local-first when the
     request's origin replica can meet its deadline.
-  * each replica runs **continuous batching**: new requests join the decode
-    batch at slot granularity; prefill is chunked to bound decode stalls.
+  * each replica runs **true continuous batching**: one background thread
+    owns a single batched KV cache with ``slots`` decode lanes and a
+    per-lane ``cache_len`` vector.  Requests join and leave at lane
+    granularity *between* decode steps — no batch flush, no padding to a
+    common length.  Every step is ONE jitted ``decode_step`` over all
+    lanes (per-lane positions down to the attention kernel), with a
+    batched on-device argmax and a single small ``(slots,)`` token
+    transfer per step — not a per-request, per-token host sync.  Prompt
+    prefill is chunked (``prefill_chunk_tokens``) and interleaved between
+    decode steps so a newly arrived long prompt cannot stall in-flight
+    decodes for more than one chunk.
+
+Batched lanes amortize the weight streaming that dominates memory-bound
+decode: at occupancy L the weights are read once per step instead of L
+times.  Lanes are numerically independent for dense stacks (batched greedy
+tokens are test-checked token-identical to a sequential batch-1 loop);
+MoE capacity-factor coupling across lanes is a known follow-on.
 
 On this host replicas are thread-backed; on a fleet they are pod slices —
 the scheduler logic is identical (it only sees profiles + telemetry).
@@ -20,6 +35,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -59,52 +75,149 @@ class RequestResult:
         return self.latency_ms() <= deadline_ms
 
 
-class Replica:
-    """One model replica with ``slots`` concurrent decode lanes.
+class _Job:
+    """One request's life inside the batched decoder."""
 
-    Weights + jitted prefill/decode are built (and compiled) at
-    construction; serving never compiles.
+    __slots__ = ("req", "lane", "lane_cache", "consumed", "out", "remaining",
+                 "done")
+
+    def __init__(self, req: Request):
+        self.req = req
+        self.lane: int = -1
+        self.lane_cache = None          # B=1 cache being chunk-prefilled
+        self.consumed = 0               # prompt tokens prefilled so far
+        self.out: List[int] = []
+        self.remaining = req.max_new_tokens
+        self.done = threading.Event()
+
+
+class Replica:
+    """One model replica: a persistent multi-lane batched decoder.
+
+    A background thread owns the batched KV cache (``slots`` lanes, each
+    ``capacity`` deep) and loops:
+
+      1. admit: waiting requests claim free lanes;
+      2. prefill one chunk of at most one admitted prompt into its private
+         B=1 lane cache (bounds the stall it can impose on step 3);
+      3. decode: one jitted ``decode_step`` over ALL active lanes with the
+         per-lane index vector; on-device batched argmax; one ``(slots,)``
+         host transfer; finished lanes retire and free their slot.
+
+    Weights + jitted prefill/decode/insert executables are built (and
+    compiled) at construction.  Chunked prefill always runs the one fixed
+    ``(1, prefill_chunk_tokens)`` shape (final partial chunks are
+    zero-padded, then ``trim_cache`` invalidates the pad positions), so
+    for attention-only stacks serving never compiles.  Stacks without
+    chunked-prefill support (recurrent mixers) and prompts whose padded
+    length exceeds ``capacity`` fall back to whole-prompt prefill, which
+    retraces once per distinct prompt length.
     """
 
     def __init__(self, name: str, cfg: ModelConfig, params, *,
-                 slots: int = 2, capacity: int = 256, greedy: bool = True):
+                 slots: int = 2, capacity: int = 256, greedy: bool = True,
+                 prefill_chunk_tokens: int = 32):
         self.name = name
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
         self.slots = slots
-        self._sem = threading.Semaphore(slots)
-        self._running = 0
-        self._queued = 0
+        self.greedy = greedy
+        self.prefill_chunk_tokens = max(int(prefill_chunk_tokens), 1)
+        self._chunkable = model_lib.supports_chunked_prefill(cfg)
+
         self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._pending: deque = deque()          # _Job waiting for a lane
+        self._prefilling: deque = deque()       # _Job with a reserved lane
+        self._lanes: List[Optional[_Job]] = [None] * slots
+        self._shutdown = False
 
         # warm the executables (cold start happens HERE, not on requests)
         self._prefill = jax.jit(
             lambda p, toks: model_lib.prefill(p, toks, cfg, capacity))
+        # chunks are always the fixed shape (1, prefill_chunk_tokens) — the
+        # final partial chunk is zero-padded and `trim_cache` invalidates
+        # the pad positions — so the chunk executable compiles exactly once
+        self._prefill_chunk = jax.jit(
+            lambda p, c, toks, start: model_lib.prefill_chunk(
+                p, c, toks, start, cfg, return_all_logits=True))
+        self._trim = jax.jit(model_lib.trim_cache)
         self._decode = jax.jit(
             lambda p, cache, tok, idx: model_lib.decode_step(
                 p, cache, tok, idx, cfg))
+        self._step = jax.jit(self._step_impl)
+        self._insert = jax.jit(self._insert_impl)
+
+        # persistent batched decode state (device) + tiny host mirrors
+        self._cache = model_lib.init_cache(cfg, slots, capacity)
+        self._tok = np.zeros((slots, 1), np.int32)
+        self._idx = np.zeros((slots,), np.int32)
+
         t0 = time.perf_counter()
         dummy = jnp.zeros((1, 8), jnp.int32)
-        logits, cache = self._prefill(params, dummy)
-        self._decode(params, cache, dummy[:, :1], jnp.asarray(8))
+        logits, lane_cache = self._prefill(params, dummy)
+        if self._chunkable and self.prefill_chunk_tokens <= capacity:
+            lane0 = model_lib.init_cache(cfg, 1, capacity)
+            _, lane0 = self._prefill_chunk(
+                params, lane0,
+                jnp.zeros((1, self.prefill_chunk_tokens), jnp.int32), 0)
+            lane_cache = self._trim(lane0, 8)
+        self._cache = self._insert(self._cache, lane_cache, 0)
+        nxt, self._cache = self._step(params, self._cache,
+                                      jnp.asarray(self._tok),
+                                      jnp.asarray(self._idx))
+        nxt.block_until_ready()
+        self._cache = model_lib.init_cache(cfg, slots, capacity)
         self.warmup_s = time.perf_counter() - t0
+
+        self._thread = threading.Thread(
+            target=self._loop, name=f"decode-{name}", daemon=True)
+        self._thread.start()
+
+    # ---------------------------------------------------- jitted executables
+    def _step_impl(self, params, cache, tok, idx):
+        """One batched decode step: per-lane positions, on-device argmax."""
+        logits, cache = model_lib.decode_step(params, cache, tok, idx,
+                                              self.cfg)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # (slots,)
+        return nxt, cache
+
+    def _insert_impl(self, cache, lane_cache, lane):
+        """Splice a finished B=1 prefill cache into lane ``lane`` of the
+        batched cache.  Period-stacked leaves carry batch at axis 1 (the
+        leading axis is the scan-stack), tail leaves at axis 0."""
+        def upd(axis):
+            def f(dst, src):
+                start = tuple(lane if i == axis else 0
+                              for i in range(dst.ndim))
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype), start)
+            return f
+        return {
+            "periods": jax.tree.map(upd(1), cache["periods"],
+                                    lane_cache["periods"]),
+            "tail": jax.tree.map(upd(0), cache["tail"], lane_cache["tail"]),
+        }
 
     # -------------------------------------------------------------- serving
     def generate(self, req: Request) -> np.ndarray:
-        with self._lock:
-            self._queued += 1
-        with self._sem:
-            with self._lock:
-                self._queued -= 1
-                self._running += 1
-            try:
-                return self._generate(req)
-            finally:
-                with self._lock:
-                    self._running -= 1
+        """Submit a request to the batched decoder and block for its tokens.
+        Concurrent callers share decode steps, not a semaphore."""
+        job = _Job(req)
+        with self._work:
+            if self._shutdown:
+                raise RuntimeError(f"replica {self.name} is stopped")
+            self._pending.append(job)
+            self._work.notify()
+        job.done.wait()
+        return np.asarray(job.out, np.int32)
 
-    def _generate(self, req: Request) -> np.ndarray:
+    def generate_sequential(self, req: Request) -> np.ndarray:
+        """Batch-1 reference decode (the pre-batching engine): whole-prompt
+        prefill + per-token jitted step with a host sync each token.  Kept
+        as the parity oracle and the benchmark baseline; also used by
+        ``profile_replica`` for uncontended single-lane latency."""
         prompt = jnp.asarray(req.prompt)[None, :]
         logits, cache = self._prefill(self.params, prompt)
         out = []
@@ -118,29 +231,152 @@ class Replica:
             pos += 1
         return np.asarray(out, np.int32)
 
+    def stop(self) -> None:
+        with self._work:
+            self._shutdown = True
+            self._work.notify_all()
+        self._thread.join(timeout=5.0)
+
+    # ---------------------------------------------------- decode loop (thread)
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                while (not self._shutdown and not self._pending
+                       and not self._prefilling
+                       and all(j is None for j in self._lanes)):
+                    self._work.wait()
+                if self._shutdown:
+                    stranded = (list(self._pending) + list(self._prefilling)
+                                + [j for j in self._lanes if j is not None])
+                    self._lanes = [None] * self.slots
+                    for j in stranded:
+                        j.done.set()    # callers get whatever decoded so far
+                    return
+                # admit: waiting requests claim free lanes
+                reserved = {j.lane for j in self._prefilling}
+                for lane in range(self.slots):
+                    if not self._pending:
+                        break
+                    if self._lanes[lane] is None and lane not in reserved:
+                        job = self._pending.popleft()
+                        job.lane = lane
+                        reserved.add(lane)
+                        self._prefilling.append(job)
+                active = [i for i, j in enumerate(self._lanes)
+                          if j is not None]
+
+            # one prefill chunk for the oldest admitted prompt — bounded
+            # work, so in-flight decodes stall at most one chunk
+            if self._prefilling:
+                self._advance_prefill(self._prefilling[0])
+
+            if active:
+                self._decode_step(active)
+
+    def _advance_prefill(self, job: _Job) -> None:
+        prompt = job.req.prompt
+        n = len(prompt)
+        chunk = self.prefill_chunk_tokens
+        # chunk path needs the zero-padded final chunk to stay inside the
+        # ring (pad positions must not wrap over real slots)
+        padded = -(-n // chunk) * chunk
+        if not self._chunkable or padded > self.capacity:
+            # single-shot prefill (recurrent stacks / near-capacity
+            # prompts); retraces once per distinct prompt length
+            logits, job.lane_cache = self._prefill(
+                self.params, jnp.asarray(prompt)[None, :])
+            job.consumed = n
+            last = -1
+        else:
+            if job.lane_cache is None:
+                job.lane_cache = model_lib.init_cache(self.cfg, 1,
+                                                      self.capacity)
+            c = min(chunk, n - job.consumed)
+            buf = np.zeros((1, chunk), np.int32)
+            buf[0, :c] = prompt[job.consumed:job.consumed + c]
+            logits, job.lane_cache = self._prefill_chunk(
+                self.params, job.lane_cache, jnp.asarray(buf), job.consumed)
+            job.consumed += c
+            last = c - 1                    # last REAL position in the chunk
+        if job.consumed < n:
+            return
+        # prompt fully prefilled: splice the lane in and emit token 0
+        first = int(jnp.argmax(logits[0, last]))
+        if last >= 0:
+            job.lane_cache = self._trim(job.lane_cache, n)
+        self._cache = self._insert(self._cache, job.lane_cache, job.lane)
+        job.lane_cache = None
+        lane = job.lane
+        self._tok[lane, 0] = first
+        self._idx[lane] = n
+        finished = False
+        with self._work:
+            self._prefilling.popleft()
+            if job.remaining > 0:
+                job.out.append(first)
+                job.remaining -= 1
+            if job.remaining == 0:
+                finished = True
+            else:
+                self._lanes[lane] = job
+        if finished:
+            job.done.set()
+
+    def _decode_step(self, active: List[int]) -> None:
+        nxt, self._cache = self._step(self.params, self._cache,
+                                      jnp.asarray(self._tok),
+                                      jnp.asarray(self._idx))
+        nxt_np = np.asarray(nxt)        # the one (slots,) transfer per step
+        finished: List[_Job] = []
+        with self._work:
+            for lane in active:
+                job = self._lanes[lane]
+                if job is None:
+                    continue
+                job.out.append(int(nxt_np[lane]))
+                job.remaining -= 1
+                self._tok[lane, 0] = nxt_np[lane]
+                self._idx[lane] += 1
+                if job.remaining == 0:
+                    self._lanes[lane] = None
+                    finished.append(job)
+        for job in finished:
+            job.done.set()
+
     # ------------------------------------------------------------ telemetry
     def state(self) -> NodeState:
+        """Lane occupancy of the shared decode batch (not semaphore counts):
+        ``running`` = lanes actively decoding, ``queued`` = requests waiting
+        for a lane or mid-prefill."""
         with self._lock:
-            return NodeState(running=self._running, queued=self._queued,
-                             updated_ms=time.monotonic() * 1e3)
+            running = sum(1 for j in self._lanes if j is not None)
+            queued = len(self._pending) + len(self._prefilling)
+        return NodeState(running=running, queued=queued,
+                         updated_ms=time.monotonic() * 1e3)
 
     def free_slots(self) -> int:
+        """Lanes not occupied, reserved, or already spoken for."""
         with self._lock:
-            return max(self.slots - self._running - self._queued, 0)
+            occupied = sum(1 for j in self._lanes if j is not None)
+            occupied += len(self._prefilling) + len(self._pending)
+            return max(self.slots - occupied, 0)
 
 
 def profile_replica(rep: Replica, prompt_lens=(8, 32, 128),
                     new_tokens: int = 8) -> AppProfile:
     """Measure this replica's latency profile (the paper's pre-evaluation):
-    prompt length plays the role of image-KB, concurrency via its slots."""
+    prompt length plays the role of image-KB.  The base point is the
+    uncontended single-lane (batch-1) latency; contention past one lane is
+    far sub-linear because lanes share each step's weight streaming, but
+    the predictor keeps the paper's conservative linear model as an upper
+    bound (profile refresh from live occupancy is a ROADMAP item)."""
     times = []
     for s in prompt_lens:
         req = Request(0, np.ones((s,), np.int32), new_tokens, 1e9)
         t0 = time.perf_counter()
-        rep._generate(req)
+        rep.generate_sequential(req)
         times.append((time.perf_counter() - t0) * 1e3)
     base = times[0]
-    # contention on a single host: assume linear slowdown past 1 lane
     conc = [1.0, 2.0, 4.0]
     cont = [base, base * 2.0, base * 4.0]
     return AppProfile(

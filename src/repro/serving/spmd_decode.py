@@ -23,24 +23,28 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
+
 NEG_INF = -1e30
 
 
 def _local_attend(q, k, v, valid, scale, softcap):
     """Partial flash-decode on the local S chunk.
-    q: (B,1,H,D); k,v: (B,Sl,Hkv,D); valid: (Sl,) -> (m, l, acc)."""
+    q: (B,1,H,D); k,v: (B,Sl,Hkv,D); valid: (Sl,) or (B,Sl) -> (m, l, acc)."""
     b, _, hq, d = q.shape
     hkv = k.shape[2]
     rep = hq // hkv
     qg = q[:, 0].reshape(b, hkv, rep, d)
+    vm = valid[None] if valid.ndim == 1 else valid          # (1|B, Sl)
+    vm = vm[:, None, None, :]
     logits = jnp.einsum("bkrd,bskd->bkrs", qg, k,
                         preferred_element_type=jnp.float32) * scale
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    logits = jnp.where(vm, logits, NEG_INF)
     m = jnp.max(logits, axis=-1)                            # (B,Hkv,rep)
     p = jnp.exp(logits - m[..., None])
-    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    p = jnp.where(vm, p, 0.0)
     l = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bkrs,bskd->bkrd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -54,11 +58,13 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
                           seq_axis: str = "model"):
     """Returns (out (B,1,H,D), k_cache', v_cache', pos').
 
-    pos: (S,) int32 ring-slot absolute positions (-1 = empty).
-    The new token is written at slot ``cache_index % S``.
+    pos: (S,) — or per-lane (B, S) — int32 ring-slot absolute positions
+    (-1 = empty).  The new token is written at slot ``cache_index % S``.
+    (Per-lane ``cache_index`` vectors are a follow-on; the index is scalar.)
     """
     b, _, hq, d = q.shape
     s = k_cache.shape[1]
+    pos_batched = pos.ndim == 2
     n_seq = mesh.shape[seq_axis]
     assert s % n_seq == 0, (s, n_seq)
     s_loc = s // n_seq
@@ -86,8 +92,13 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
                                              (0, off_c, 0, 0))
         k_l = jnp.where(in_range, k_new, k_l)
         v_l = jnp.where(in_range, v_new, v_l)
-        pos_new = jax.lax.dynamic_update_slice(
-            pos_l, idx[None].astype(jnp.int32), (off_c,))
+        if pos_batched:
+            pos_new = jax.lax.dynamic_update_slice(
+                pos_l, jnp.full((pos_l.shape[0], 1), idx, jnp.int32),
+                (0, off_c))
+        else:
+            pos_new = jax.lax.dynamic_update_slice(
+                pos_l, idx[None].astype(jnp.int32), (off_c,))
         pos_l = jnp.where(in_range, pos_new, pos_l)
 
         valid = pos_l >= 0
@@ -104,19 +115,20 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
         out = out.reshape(q_l.shape[0], 1, hq, d).astype(q_l.dtype)
         return out, k_l, v_l, pos_l
 
-    fn = jax.shard_map(
+    pos_spec = P(None, seq_axis) if pos_batched else P(seq_axis)
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None, None),        # q (replicated on seq)
                   P(bspec, seq_axis, None, None),    # k cache
                   P(bspec, seq_axis, None, None),    # v cache
                   P(bspec, None, None, None),        # new k
                   P(bspec, None, None, None),        # new v
-                  P(seq_axis),                       # pos
+                  pos_spec,                          # pos
                   P()),                              # cache_index
         out_specs=(P(bspec, None, None, None),
                    P(bspec, seq_axis, None, None),
                    P(bspec, seq_axis, None, None),
-                   P(seq_axis)),
+                   pos_spec),
         check_vma=False,
     )
     return fn(q, k_cache, v_cache, new_k, new_v, pos,

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.training.optimizer import dequantize_int8, quantize_int8
 
 
@@ -43,7 +44,7 @@ def make_compressed_allreduce(mesh, axis_name: str = "data"):
             summed = int8_psum(xs, axis_name)
             return summed / mesh.shape[axis_name]
 
-        return jax.shard_map(
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=P(axis_name),
             out_specs=P(),

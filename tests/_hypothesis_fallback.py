@@ -1,0 +1,93 @@
+"""Minimal deterministic stand-in for ``hypothesis`` so the tier-1 suite
+collects and runs on machines without it installed.
+
+Implements exactly the subset this repo's property tests use: ``given``,
+``settings`` (no-op), and the ``integers`` / ``floats`` / ``sampled_from`` /
+``lists`` strategies.  Each ``@given`` test runs against a fixed number of
+seeded pseudo-random examples — far weaker than real hypothesis (no
+shrinking, no database, no edge-case bias), so install the real package
+(``pip install -r requirements-dev.txt``) for meaningful property coverage.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_EXAMPLES = 10
+_SEED = 1234567
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=100):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+               allow_infinity=False):
+        lo, hi = float(min_value), float(max_value)
+        # bias toward the endpoints like hypothesis does
+        def draw(rng):
+            r = rng.random()
+            if r < 0.1:
+                return lo
+            if r < 0.2:
+                return hi
+            return rng.uniform(lo, hi)
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        max_size = max_size if max_size is not None else min_size + 10
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def settings(*_args, **_kwargs):
+    """No-op decorator factory (max_examples/deadline are ignored)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the wrapped test against ``_EXAMPLES`` seeded example draws."""
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters.values())
+        # params the strategies fill; whatever is left pytest supplies
+        # (fixtures) — mirror hypothesis, which hides filled params
+        filled = {p.name for p in params[:len(arg_strategies)]}
+        filled |= set(kw_strategies)
+        leftover = [p for p in params if p.name not in filled]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(_SEED)
+            for _ in range(_EXAMPLES):
+                drawn_args = tuple(s.draw(rng) for s in arg_strategies)
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*drawn_args, *args, **kwargs, **drawn_kw)
+
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(leftover)
+        return wrapper
+    return deco

@@ -2,7 +2,12 @@
 admission, and hypothesis properties of the profile curves."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    # deterministic local fallback; install requirements-dev.txt
+    # for real property-based coverage
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.admission import admit, min_feasible_ms
 from repro.core.latency import NodeState, Task, predict_process_ms, \

@@ -4,7 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    # deterministic local fallback; install requirements-dev.txt
+    # for real property-based coverage
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
@@ -81,6 +86,43 @@ def test_decode_attention_vs_oracle(b, smax, hq, hkv, d, clen, window, dtype):
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+PER_LANE_CASES = [
+    (4, 512, 8, 2, 64, (300, 17, 511, 64), 0, jnp.float32),
+    (3, 256, 4, 4, 32, (1, 123, 256), 64, jnp.float32),
+    (4, 256, 8, 1, 64, (255, 8, 100, 31), 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,smax,hq,hkv,d,clens,window,dtype", PER_LANE_CASES)
+def test_decode_attention_per_lane_cache_len(b, smax, hq, hkv, d, clens,
+                                             window, dtype):
+    """Continuous batching: each lane masks against its OWN cache_len.  The
+    batched kernel with a (B,) length vector must match the scalar oracle
+    applied lane-by-lane."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = rand(k1, (b, 1, hq, d), dtype)
+    kc = rand(k2, (b, smax, hkv, d), dtype)
+    vc = rand(k3, (b, smax, hkv, d), dtype)
+    clen_vec = jnp.asarray(clens, jnp.int32)
+    out = decode_attention(q, kc, vc, cache_len=clen_vec, window=window,
+                           interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    for lane, clen in enumerate(clens):
+        exp = ref.decode_mha_reference(q[lane:lane + 1], kc[lane:lane + 1],
+                                       vc[lane:lane + 1], cache_len=clen,
+                                       window=window)
+        np.testing.assert_allclose(
+            np.asarray(out[lane:lane + 1], np.float32),
+            np.asarray(exp, np.float32), atol=tol, rtol=tol,
+            err_msg=f"lane {lane} (cache_len={clen})")
+    # vectorized jnp reference path agrees too
+    exp_vec = ref.decode_mha_reference(q, kc, vc, cache_len=clen_vec,
+                                       window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp_vec, np.float32),
+                               atol=tol, rtol=tol)
 
 
 # ------------------------------------------------------------------------ SSD

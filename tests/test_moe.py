@@ -4,7 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    # deterministic local fallback; install requirements-dev.txt
+    # for real property-based coverage
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.models import moe as moe_lib

@@ -4,7 +4,12 @@ before create + minimum processing), monotone placement sanity — swept
 over random workloads and policies."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    # deterministic local fallback; install requirements-dev.txt
+    # for real property-based coverage
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.policies import make_policy
 from repro.core.profile import FACE
