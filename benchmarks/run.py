@@ -2,11 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
 benchmark itself; derived = the headline metric checked against the paper).
+Serving benches additionally write ``BENCH_serving.json`` (tokens/sec at
+concurrency 1/4, routing deadline-hit rate, the measured step curve) so the
+serving perf trajectory is tracked across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run            # paper suite
-  PYTHONPATH=src python -m benchmarks.run --live     # + live-host profiling
+  PYTHONPATH=src python -m benchmarks.run                  # paper suite
+  PYTHONPATH=src python -m benchmarks.run --live           # + live profiling
+  PYTHONPATH=src python -m benchmarks.run --serving-smoke  # serving only (CI)
 """
 import argparse
+import json
 import os
 import sys
 import time
@@ -37,6 +42,10 @@ BENCHES = [
 
 # registered below (defined in this module, not paper_tables): the serving
 # engine's continuous-batching throughput trajectory
+
+# serving benches deposit their headline metrics here; main() writes the
+# accumulated dict to BENCH_serving.json (the cross-PR perf trajectory)
+SERVING_METRICS = {}
 
 
 def bench_serving_throughput():
@@ -96,8 +105,84 @@ def bench_serving_throughput():
     rep.stop()
 
     speedup = batched_tps[4] / seq_tps
+    SERVING_METRICS["tokens_per_sec"] = {
+        f"conc{c}": round(v, 1) for c, v in batched_tps.items()}
+    SERVING_METRICS["sequential_tokens_per_sec"] = round(seq_tps, 1)
+    SERVING_METRICS["speedup_conc4"] = round(speedup, 2)
     return rows, (f"conc4_speedup={speedup:.2f}x "
                   f"batched4={batched_tps[4]:.0f}tok/s seq={seq_tps:.0f}tok/s")
+
+
+def bench_serving_routing():
+    """DDS routing over a measured lane-mode profile: submit a burst of
+    deadline-carrying requests through ServingFleet and record the
+    deadline-hit rate plus the measured step/contention curves the router
+    decided with.  Tracks whether the Update-Profile loop keeps routing
+    decisions aligned with the hardware across PRs."""
+    import threading
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core.policies import make_policy
+    from repro.models import model as M
+    from repro.serving.engine import (Replica, Request, ServingFleet,
+                                      profile_replica)
+
+    cfg = get_smoke_config("granite-8b").replace(param_dtype=jnp.float32,
+                                                 dtype=jnp.float32)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rep = Replica("serve0", cfg, params, slots=4, capacity=128)
+    prof = profile_replica(rep, prompt_lens=(8, 16), new_tokens=8)
+    fleet = ServingFleet(make_policy("DDS"), source="serve0",
+                         coordinator="serve0")
+    fleet.add_replica(rep, profile=prof)
+
+    prompt_len, new_tokens, n_requests = 16, 16, 12
+    # SLO: a generous multiple of the occupancy-aware prediction for this
+    # burst (full-occupancy step cadence, one wave per slots-worth of
+    # requests) — the hit rate measures router+engine, not the SLO choice
+    per_req = (prof.prefill_ms(float(prompt_len))
+               + new_tokens * prof.step_curve(float(rep.slots)))
+    waves = -(-n_requests // rep.slots)
+    deadline_ms = 8.0 * waves * per_req
+    # draw all prompts up front: np.random.Generator is not thread-safe,
+    # and the fixed seed must mean a fixed workload across PRs
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab_size,
+                            size=(prompt_len,)).astype(np.int32)
+               for _ in range(n_requests)]
+    results = [None] * n_requests
+
+    def run(i):
+        req = Request(i, prompts[i], new_tokens, deadline_ms)
+        results[i] = fleet.submit(req)
+
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(n_requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    hit = sum(1 for r in results if r.met(deadline_ms)) / n_requests
+    fleet.stop()
+
+    SERVING_METRICS["routing"] = {
+        "requests": n_requests,
+        "deadline_ms": round(deadline_ms, 1),
+        "deadline_hit_rate": round(hit, 3),
+        "placements": dict(fleet.stats),
+    }
+    SERVING_METRICS["profile"] = {
+        "step_ms_by_occupancy": [round(y, 3) for y in prof.step_curve.ys],
+        "contention_ms": [round(y, 1) for y in prof.contention.ys],
+        "prefill_chunk_ms": round(prof.prefill_chunk_ms, 3),
+        "base_ms": round(prof.base_ms, 1),
+    }
+    rows = [{"deadline_hit_rate": hit, "requests": n_requests}]
+    return rows, (f"hit_rate={hit:.2f} deadline={deadline_ms:.0f}ms "
+                  f"step_ms={[round(y, 2) for y in prof.step_curve.ys]}")
 
 
 def live_profile_bench():
@@ -132,17 +217,36 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--live", action="store_true",
                     help="also run live-host profiling benches (slow)")
+    ap.add_argument("--serving-smoke", action="store_true",
+                    help="run only the serving benches and write the JSON "
+                         "(the CI perf-trajectory smoke)")
+    ap.add_argument("--serving-json",
+                    default=os.path.join(os.path.dirname(
+                        os.path.abspath(__file__)), "..",
+                        "BENCH_serving.json"),
+                    help="where to write the serving metrics JSON")
     args, _ = ap.parse_known_args()
 
-    benches = list(BENCHES)
-    benches.append(("bench_serving_throughput", bench_serving_throughput))
-    if args.live:
-        benches.append(("live_profile", live_profile_bench))
+    serving = [("bench_serving_throughput", bench_serving_throughput),
+               ("bench_serving_routing", bench_serving_routing)]
+    if args.serving_smoke:
+        benches = serving
+    else:
+        benches = list(BENCHES) + serving
+        if args.live:
+            benches.append(("live_profile", live_profile_bench))
 
     print("name,us_per_call,derived")
     for name, fn in benches:
         us, derived = _timed(fn)
         print(f"{name},{us:.0f},{derived}", flush=True)
+
+    if SERVING_METRICS:
+        path = os.path.abspath(args.serving_json)
+        with open(path, "w") as f:
+            json.dump(SERVING_METRICS, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# serving metrics -> {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

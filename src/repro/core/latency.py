@@ -8,6 +8,7 @@ policy routes through this single predictor.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -39,7 +40,13 @@ class NodeState:
 
 def predict_process_ms(profile: DeviceProfile, task: Task,
                        state: NodeState, extra: int = 1) -> float:
-    """T_process if the task were added now: concurrency = running + extra."""
+    """T_process if the task were added now: concurrency = running + extra.
+
+    Profiles in lane-occupancy mode (batched serving replicas) charge the
+    joining task its prefill plus ``tokens_per_task`` decode steps at the
+    *measured* step cadence for the post-join occupancy — the marginal cost
+    of sharing the batch — instead of a full process-per-slot contended
+    runtime (``AppProfile.process_time`` branches on ``lane_mode``)."""
     app = profile.app(task.app_id)
     conc = min(state.running + extra, profile.slots)
     return app.process_time(task.size_kb, conc, state.cpu_load)
@@ -49,13 +56,28 @@ def predict_queue_ms(profile: DeviceProfile, task: Task,
                      state: NodeState) -> float:
     """T_que: queued tasks drain through ``slots`` lanes at the contended
     per-task rate.  The paper's predictor uses exactly this queue-depth x
-    profiled-time estimate (and flags its staleness risk)."""
+    profiled-time estimate (and flags its staleness risk).
+
+    Lane-occupancy mode: a queued request waits for a lane to retire, i.e.
+    one task's worth of decode steps at full occupancy, plus the chunked
+    prefill interleave each queued prompt imposes on the loop — a prompt
+    of L tokens interleaves ceil(L / chunk_tokens) chunks, not one (the
+    incoming task's size stands in for the unknown queued-prompt sizes)."""
     if state.queued <= 0:
         return 0.0
     app = profile.app(task.app_id)
+    waves = state.queued / max(profile.slots, 1)
+    if getattr(app, "lane_mode", False):
+        per_task = app.tokens_per_task * app.step_curve(float(profile.slots))
+        if state.cpu_load > 0.0 and app.load_curve is not None:
+            per_task *= app.load_curve(state.cpu_load) / app.load_curve(0.0)
+        chunks = 1.0
+        if app.prefill_chunk_tokens > 0:
+            chunks = math.ceil(max(task.size_kb, 1.0)
+                               / app.prefill_chunk_tokens)
+        return waves * per_task + state.queued * chunks * app.prefill_chunk_ms
     per_task = app.process_time(task.size_kb, min(profile.slots, max(
         state.running, 1)), state.cpu_load)
-    waves = state.queued / max(profile.slots, 1)
     return waves * per_task
 
 

@@ -71,22 +71,55 @@ class Worker:
             self._threads.append(t)
 
     def stop(self) -> None:
-        self._stop.set()
+        with self._lock:                 # serialize against submit: after
+            self._stop.set()             # this, submit refuses new tasks
         for _ in self._threads:
             self._q.put((float("inf"), -1, None, None))
         for t in self._threads:
             t.join(timeout=2.0)
+        self._drain_stranded()
+
+    def _drain_stranded(self) -> None:
+        """Tasks that slipped into the queue around shutdown (or were queued
+        behind long work) are completed with an error so callers waiting on
+        ``on_done`` never hang — the fleet's 'lost, not crashed' contract."""
+        while True:
+            try:
+                _, _, task, on_done = self._q.get_nowait()
+            except queue.Empty:
+                return
+            if task is None:
+                continue
+            with self._lock:
+                self._queued -= 1
+            now = time.monotonic() * 1e3
+            comp = Completion(task, now, now, self.name, None,
+                              error="worker stopped")
+            self._completions.put(comp)
+            if on_done is not None:
+                on_done(comp)
+
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
 
     # ----------------------------------------------------------- submission
     def submit(self, task: Task, on_done: Optional[Callable] = None) -> bool:
         with self._lock:
+            # stop-check and enqueue share the lock with stop()'s flag-set,
+            # so a scale-in racing a submit either refuses the task here
+            # (fleet accounts it lost) or enqueues it where stop()'s
+            # stranded-task drain will error-complete it — a caller
+            # blocking on on_done can never hang.
+            if self._stop.is_set():
+                return False
             if self._queued >= self._capacity:
                 return False
             self._queued += 1
             self._seq += 1
             prio = (task.created_ms + task.constraint_ms
                     if self.discipline == "edf" else self._seq)
-        self._q.put((prio, self._seq, task, on_done))
+            self._q.put((prio, self._seq, task, on_done))
         return True
 
     # -------------------------------------------------------------- workers

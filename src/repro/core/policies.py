@@ -17,7 +17,11 @@ Beyond-paper policies (ours — recorded separately in EXPERIMENTS.md):
   * JSQ      — coordinator joins the shortest (stale-view) queue
 
 Every decision goes through the paper's T_task predictor over possibly-stale
-``NodeState`` views — the staleness tolerance is the design point.
+``NodeState`` views — the staleness tolerance is the design point.  The
+predictor itself is profile-driven: process-per-slot devices use the
+measured contention curve (Tables V/VI), while batched serving replicas
+carry lane-mode profiles (measured per-occupancy ``decode_step`` cadence),
+so DDS does not over-penalize a busy-but-sub-linear batched replica.
 """
 from __future__ import annotations
 
@@ -93,7 +97,10 @@ class DDS(Policy):
 
     def __init__(self, require_free_slot: bool = True):
         # paper: "only offloads the task to that device if containers are
-        # available" — mitigates the queue-induced prediction error.
+        # available" — mitigates the queue-induced prediction error.  For
+        # batched replicas a "slot" is a decode lane, so a busy replica
+        # with a free lane stays eligible and its lane-mode profile prices
+        # the join at the measured marginal step cost.
         self.require_free_slot = require_free_slot
 
     def decide_source(self, task, now, local):

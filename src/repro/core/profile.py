@@ -21,6 +21,7 @@ steps under true process-level concurrency (the TPU-fleet adaptation's
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -48,22 +49,33 @@ def _interp(xs: Sequence[float], ys: Sequence[float], x: float) -> float:
 
 @dataclass
 class Curve:
-    """A measured 1-D curve with EWMA-updatable points."""
+    """A measured 1-D curve with EWMA-updatable points.
+
+    ``observe`` (UP-loop writers) and ``__call__``/``copy`` (predictor and
+    heartbeat readers) run on different threads, so every access takes the
+    curve's lock — EWMA updates can never tear an interpolation read or a
+    snapshot copy.
+    """
 
     xs: List[float]
     ys: List[float]
     ewma: float = 0.25
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def __call__(self, x: float) -> float:
-        return _interp(self.xs, self.ys, x)
+        with self._lock:
+            return _interp(self.xs, self.ys, x)
 
     def observe(self, x: float, y: float) -> None:
         """EWMA-update the nearest measured point (Update-Profile step)."""
-        i = int(np.argmin(np.abs(np.asarray(self.xs) - x)))
-        self.ys[i] = (1 - self.ewma) * self.ys[i] + self.ewma * y
+        with self._lock:
+            i = int(np.argmin(np.abs(np.asarray(self.xs) - x)))
+            self.ys[i] = (1 - self.ewma) * self.ys[i] + self.ewma * y
 
     def copy(self) -> "Curve":
-        return Curve(list(self.xs), list(self.ys), self.ewma)
+        with self._lock:
+            return Curve(list(self.xs), list(self.ys), self.ewma)
 
 
 # ------------------------------------------------------------------- profiles
@@ -78,17 +90,53 @@ class AppProfile:
     load_curve: Optional[Curve] = None   # cpu load [0,1] -> runtime (ms) @ n=1
     cold_start: Optional[Curve] = None   # concurrency -> cold container start (ms)
     reference_size: float = 29.0         # size units of base_ms
+    # --- lane-occupancy mode (batched serving replicas) -----------------
+    # Batched decode lanes share each step's weight streaming, so joining a
+    # batch at occupancy n costs the *measured* step cadence at n — strongly
+    # sub-linear — not a full process-per-slot contended runtime.
+    step_curve: Optional[Curve] = None   # lane occupancy -> decode-step wall (ms)
+    tokens_per_task: float = 0.0         # reference decode length (steps/task)
+    prefill_chunk_ms: float = 0.0        # chunked-prefill interleave cost (ms)
+    prefill_chunk_tokens: float = 0.0    # tokens per interleaved chunk (0 = whole-prompt)
+    # guards the prefill_chunk_ms EWMA read-modify-write (same UP-writer vs
+    # heartbeat-copier pattern the Curve lock covers); bare reads of the
+    # float stay lock-free
+    _pc_lock: threading.Lock = field(default_factory=threading.Lock,
+                                     repr=False, compare=False)
+
+    @property
+    def lane_mode(self) -> bool:
+        """True when this profile models a batched-lane replica: predictions
+        use the measured per-occupancy step curve instead of the
+        process-per-slot contention curve."""
+        return self.step_curve is not None and self.tokens_per_task > 0
+
+    def prefill_ms(self, size: float | None) -> float:
+        """Lane mode: the prompt-length-dependent prefill component, i.e.
+        the measured end-to-end runtime minus the decode steps it includes."""
+        if self.size_curve is None:
+            return 0.0
+        s = self.reference_size if size is None else size
+        decode = self.tokens_per_task * (self.step_curve(1.0)
+                                         if self.step_curve else 0.0)
+        return max(self.size_curve(s) - decode, 0.0)
 
     def process_time(self, size: float | None = None, concurrency: int = 1,
                      cpu_load: float = 0.0) -> float:
         """Predicted runtime (ms) of one task.
 
         Composition: contention supplies the concurrency scaling, size and
-        load curves supply multiplicative corrections relative to base.
+        load curves supply multiplicative corrections relative to base.  In
+        lane mode the task instead pays its prefill plus ``tokens_per_task``
+        decode steps at the measured step cadence for that occupancy.
         """
-        t = self.contention(max(concurrency, 1))
-        if size is not None and self.size_curve is not None:
-            t *= self.size_curve(size) / self.size_curve(self.reference_size)
+        conc = max(concurrency, 1)
+        if self.lane_mode:
+            t = self.prefill_ms(size) + self.tokens_per_task * self.step_curve(conc)
+        else:
+            t = self.contention(conc)
+            if size is not None and self.size_curve is not None:
+                t *= self.size_curve(size) / self.size_curve(self.reference_size)
         if cpu_load > 0.0 and self.load_curve is not None:
             t *= self.load_curve(cpu_load) / self.load_curve(0.0)
         return t
@@ -110,13 +158,31 @@ class AppProfile:
             t /= self.load_curve(cpu_load) / self.load_curve(0.0)
         self.contention.observe(concurrency, t)
 
+    def observe_step(self, occupancy: int, step_ms: float) -> None:
+        """Lane-mode UP loop: feed one measured (occupancy, decode-step
+        wall-clock) sample back into the step curve."""
+        if self.step_curve is not None:
+            self.step_curve.observe(float(max(occupancy, 1)), step_ms)
+
+    def observe_prefill_chunk(self, ms: float, ewma: float = 0.25) -> None:
+        """Lane-mode UP loop: EWMA the chunked-prefill interleave cost."""
+        with self._pc_lock:
+            if self.prefill_chunk_ms > 0.0:
+                self.prefill_chunk_ms = ((1 - ewma) * self.prefill_chunk_ms
+                                         + ewma * ms)
+            else:
+                self.prefill_chunk_ms = ms
+
     def copy(self) -> "AppProfile":
         return AppProfile(
             self.app_id, self.base_ms, self.contention.copy(),
             self.size_curve.copy() if self.size_curve else None,
             self.load_curve.copy() if self.load_curve else None,
             self.cold_start.copy() if self.cold_start else None,
-            self.reference_size)
+            self.reference_size,
+            self.step_curve.copy() if self.step_curve else None,
+            self.tokens_per_task, self.prefill_chunk_ms,
+            self.prefill_chunk_tokens)
 
 
 @dataclass
@@ -235,13 +301,28 @@ def measure_profile(app_id: str, step_fn, sizes: Sequence[int],
 
     size_ms = [min(time_one(s) for _ in range(reps)) for s in sizes]
 
+    # Contention (Table V/VI semantics): *average per-task* runtime at
+    # concurrency n — each task times its own start->finish inside the pool
+    # (batch wall-clock over-counts whenever tasks serialize unevenly).
+    # Best-of-reps like the size curve, then clamp out timer jitter: true
+    # contention cannot make concurrent execution faster than less-loaded.
+    concurrencies = sorted(concurrencies)
     conc_ms = []
     for n in concurrencies:
-        with cf.ThreadPoolExecutor(max_workers=n) as ex:
-            t0 = time.perf_counter()
-            list(ex.map(lambda _: step_fn(ref_size), range(n)))
-            total = (time.perf_counter() - t0) * 1e3
-        conc_ms.append(total / 1.0)      # avg completion of n concurrent tasks
+        per_rep = []
+        for _ in range(reps):
+            with cf.ThreadPoolExecutor(max_workers=n) as ex:
+                per_task = list(ex.map(lambda _: time_one(ref_size), range(n)))
+            per_rep.append(sum(per_task) / n)
+        conc_ms.append(min(per_rep))
+    raw = list(conc_ms)
+    conc_ms = [float(v) for v in np.maximum.accumulate(conc_ms)]
+    # the raw measurements must be monotone up to timer jitter — a point
+    # the clamp had to lift by more than 2x means the workload itself is
+    # not contention-shaped (e.g. step_fn caches across calls), and the
+    # curve would be fiction, not measurement
+    assert all(r >= 0.5 * c for r, c in zip(raw, conc_ms)), \
+        f"measured contention grossly non-monotone in n: raw={raw}"
 
     base = conc_ms[0]
     return AppProfile(

@@ -96,29 +96,39 @@ class Fleet:
             w.stop()
 
     # ------------------------------------------------------------- routing
-    def _view(self, name: str, exact: bool) -> NodeView:
-        w = self.workers[name]
+    def _view(self, w: Worker, exact: bool) -> NodeView:
         if exact:
             state = w.state()
         else:
-            rec = self.table.get(name)
+            rec = self.table.get(w.name)
             state = rec.state if rec else NodeState()
         free = max(w.profile.slots - state.running - state.queued, 0)
         return NodeView(profile=w.profile, state=state, free_slots=free)
 
+    def _lost(self) -> bool:
+        with self._lock:
+            self.stats.lost += 1
+        return False
+
     def submit(self, task: Task,
                on_done: Optional[Callable[[Completion], None]] = None) -> bool:
-        """Route one task through the two-level scheduler."""
+        """Route one task through the two-level scheduler.
+
+        Membership is snapshotted under the lock once, up front: elastic
+        scale-in (``remove_worker``) can run mid-submit, and routing must
+        never KeyError on a vanished node — a task routed to a node that
+        left the fleet is accounted ``lost`` (the same UDP-loss surface the
+        paper's source->device sends have), not crashed."""
         now = time.monotonic() * 1e3
         with self._lock:
             self.stats.submitted += 1
+            workers = dict(self.workers)
+            links = dict(self.links)
+            fleet_profiles = self._fleet_profiles
+            if fleet_profiles is None:
+                fleet_profiles = {n: w.profile for n, w in workers.items()}
+                self._fleet_profiles = fleet_profiles
         if self.admission_margin > 0:
-            with self._lock:
-                fleet_profiles = self._fleet_profiles
-                if fleet_profiles is None:
-                    fleet_profiles = {n: w.profile
-                                      for n, w in self.workers.items()}
-                    self._fleet_profiles = fleet_profiles
             ok, _ = admit(fleet_profiles, task, self.source_name,
                           self.admission_margin)
             if not ok:
@@ -127,35 +137,44 @@ class Fleet:
                 return False
 
         # level 1: source-local decision on exact local state
+        source = workers.get(self.source_name)
+        if source is None:
+            return self._lost()          # source itself scaled in
         decision = self.policy.decide_source(
-            task, now, self._view(self.source_name, exact=True))
+            task, now, self._view(source, exact=True))
         if decision == LOCAL:
-            return self._place(task, self.source_name, on_done, local=True)
+            return self._place(task, self.source_name, workers, on_done)
 
         # forward to coordinator (over the source->coordinator link)
-        if not self.links[self.coordinator_name].send(task.size_kb):
-            with self._lock:
-                self.stats.lost += 1               # UDP-style loss
-            return False
+        coordinator = workers.get(self.coordinator_name)
+        coord_link = links.get(self.coordinator_name)
+        if coordinator is None or coord_link is None:
+            return self._lost()
+        if not coord_link.send(task.size_kb):
+            return self._lost()                    # UDP-style loss
 
         # level 2: coordinator decision on (stale) MP table views
-        peers = {n: self._view(n, exact=False) for n in self.workers
+        peers = {n: self._view(w, exact=False) for n, w in workers.items()
                  if n not in (self.coordinator_name, task.source)}
-        coord_view = self._view(self.coordinator_name, exact=True)
+        coord_view = self._view(coordinator, exact=True)
         target = self.policy.decide_coordinator(task, now, coord_view, peers)
         if target != self.coordinator_name:
-            if not self.links[target].send(task.size_kb):
-                with self._lock:
-                    self.stats.lost += 1
-                return False
-        return self._place(task, target, on_done, local=False)
+            link = links.get(target)
+            if link is None or not link.send(task.size_kb):
+                return self._lost()
+        return self._place(task, target, workers, on_done)
 
-    def _place(self, task, name, on_done, local: bool) -> bool:
-        ok = self.workers[name].submit(task, on_done)
-        if ok:
-            with self._lock:
-                self.stats.placements[name] = \
-                    self.stats.placements.get(name, 0) + 1
+    def _place(self, task, name, workers: Dict[str, Worker],
+               on_done) -> bool:
+        w = workers.get(name)
+        if w is None or w.stopped:
+            return self._lost()          # target vanished between view & place
+        ok = w.submit(task, on_done)
+        if not ok:
+            return self._lost()          # stopped (scale-in race) / queue full
+        with self._lock:
+            self.stats.placements[name] = \
+                self.stats.placements.get(name, 0) + 1
         return ok
 
     # ------------------------------------------------------------- results

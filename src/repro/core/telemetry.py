@@ -64,7 +64,14 @@ class MaintainProfileTable:
 
 class UpdateProfilePublisher:
     """Node-side periodic state publisher (UP).  ``state_fn`` samples the
-    node's live counters; publishing runs on a daemon thread."""
+    node's live counters; publishing runs on a daemon thread.
+
+    Each heartbeat publishes a *snapshot* (``profile.copy()``), never the
+    live object: the node's UP loop keeps EWMA-mutating its own profile
+    (``observe_runtime`` / ``observe_step``) while router threads read the
+    MP table concurrently, so sharing by reference would let a predictor
+    read a half-updated curve.  Readers get a stable profile at most one
+    heartbeat stale — exactly the paper's staleness-tolerant contract."""
 
     def __init__(self, name: str, profile: DeviceProfile,
                  state_fn: Callable[[], NodeState],
@@ -78,7 +85,7 @@ class UpdateProfilePublisher:
         self._thread: Optional[threading.Thread] = None
 
     def publish_once(self) -> None:
-        self.table.update(self.name, self.state_fn(), self.profile)
+        self.table.update(self.name, self.state_fn(), self.profile.copy())
 
     def start(self) -> None:
         self.publish_once()

@@ -9,7 +9,15 @@ The paper's architecture, realized for model serving:
   * the **router** is the paper's two-level DDS: requests carry SLO
     deadlines; placement uses profile-predicted T_task over the replicas'
     telemetry (queue depth, lane occupancy), local-first when the
-    request's origin replica can meet its deadline.
+    request's origin replica can meet its deadline.  Replica profiles are
+    *measured*, not modeled: ``profile_replica`` times the batched
+    ``decode_step`` at every occupancy 1..slots (plus the chunked-prefill
+    interleave cost) during warmup, and the decode loop keeps feeding live
+    (occupancy, step_ms) samples through ``AppProfile.observe_step`` — the
+    paper's Update-Profile loop.  ``ServingFleet`` publishes those
+    profiles over an ``UpdateProfilePublisher`` heartbeat into a
+    ``MaintainProfileTable`` and routes off that staleness-tolerant MP
+    view, exactly like the core ``Fleet``.
   * each replica runs **true continuous batching**: one background thread
     owns a single batched KV cache with ``slots`` decode lanes and a
     per-lane ``cache_len`` vector.  Requests join and leave at lane
@@ -45,8 +53,9 @@ import numpy as np
 
 from repro.common.config import ModelConfig
 from repro.core.latency import NodeState, Task
-from repro.core.policies import NodeView, Policy
+from repro.core.policies import LOCAL, NodeView, Policy
 from repro.core.profile import AppProfile, Curve, DeviceProfile, LinkProfile
+from repro.core.telemetry import MaintainProfileTable, UpdateProfilePublisher
 from repro.models import model as model_lib
 
 
@@ -125,6 +134,9 @@ class Replica:
         self.greedy = greedy
         self.prefill_chunk_tokens = max(int(prefill_chunk_tokens), 1)
         self._chunkable = model_lib.supports_chunked_prefill(cfg)
+        # UP loop: set by ServingFleet.add_replica / profile_replica; the
+        # decode loop EWMAs live (occupancy, step_ms) samples into it
+        self.profile: Optional[AppProfile] = None
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -216,8 +228,7 @@ class Replica:
     def generate_sequential(self, req: Request) -> np.ndarray:
         """Batch-1 reference decode (the pre-batching engine): whole-prompt
         prefill + per-token jitted step with a host sync each token.  Kept
-        as the parity oracle and the benchmark baseline; also used by
-        ``profile_replica`` for uncontended single-lane latency."""
+        as the parity oracle and the benchmark baseline."""
         prompt = jnp.asarray(req.prompt)[None, :]
         logits, cache = self._prefill(self.params, prompt)
         out = []
@@ -294,8 +305,16 @@ class Replica:
             c = min(chunk, n - job.consumed)
             buf = np.zeros((1, chunk), np.int32)
             buf[0, :c] = prompt[job.consumed:job.consumed + c]
+            t0 = time.perf_counter()
             logits, job.lane_cache = self._prefill_chunk(
                 self.params, job.lane_cache, jnp.asarray(buf), job.consumed)
+            prof = self.profile
+            if prof is not None:
+                # sync so the UP sample is the chunk's real wall-clock, not
+                # its async-dispatch time (the decode stream pays the
+                # compute either way — this only defers host bookkeeping)
+                jax.block_until_ready(logits)
+                prof.observe_prefill_chunk((time.perf_counter() - t0) * 1e3)
             job.consumed += c
             last = c - 1                    # last REAL position in the chunk
         if job.consumed < n:
@@ -323,10 +342,14 @@ class Replica:
             job.done.set()
 
     def _decode_step(self, active: List[int]) -> None:
+        t0 = time.perf_counter()
         nxt, self._cache = self._step(self.params, self._cache,
                                       jnp.asarray(self._tok),
                                       jnp.asarray(self._idx))
         nxt_np = np.asarray(nxt)        # the one (slots,) transfer per step
+        prof = self.profile             # Update-Profile: live step telemetry
+        if prof is not None:
+            prof.observe_step(len(active), (time.perf_counter() - t0) * 1e3)
         finished: List[_Job] = []
         with self._work:
             for lane in active:
@@ -362,72 +385,215 @@ class Replica:
             return max(self.slots - occupied, 0)
 
 
+def measure_step_curve(rep: Replica, steps_per_point: int = 6,
+                       warmup_steps: int = 2) -> Tuple[List[float], List[float], float]:
+    """Time the batched ``decode_step`` at every lane occupancy 1..slots.
+
+    Runs the replica's own jitted ``_step`` executable over a *scratch*
+    cache (never the live one), with the first ``n`` lanes given non-zero
+    positions, and takes best-of-``steps_per_point`` wall-clock per
+    occupancy.  Also times one warm ``prefill_chunk`` call — the cost a
+    joining prompt interleaves between decode steps.  Call before serving
+    traffic (the decode thread is parked on its condition variable then).
+
+    Returns ``(occupancies, step_ms, prefill_chunk_ms)``.
+    """
+    cache = model_lib.init_cache(rep.cfg, rep.slots, rep.capacity)
+    tok = jnp.zeros((rep.slots, 1), jnp.int32)
+    pos = min(16, rep.capacity - 1)
+    occs, step_ms = [], []
+    for n in range(1, rep.slots + 1):
+        idx = jnp.asarray(
+            np.where(np.arange(rep.slots) < n, pos, 0).astype(np.int32))
+        best = float("inf")
+        for i in range(warmup_steps + steps_per_point):
+            t0 = time.perf_counter()
+            nxt, cache = rep._step(rep.params, cache, tok, idx)
+            nxt.block_until_ready()
+            dt = (time.perf_counter() - t0) * 1e3
+            if i >= warmup_steps:
+                best = min(best, dt)
+        occs.append(float(n))
+        step_ms.append(best)
+
+    chunk_ms = 0.0
+    if rep._chunkable and rep.prefill_chunk_tokens <= rep.capacity:
+        lane = model_lib.init_cache(rep.cfg, 1, rep.capacity)
+        buf = jnp.zeros((1, rep.prefill_chunk_tokens), jnp.int32)
+        best = float("inf")
+        for i in range(1 + steps_per_point):
+            t0 = time.perf_counter()
+            lg, lane = rep._prefill_chunk(rep.params, lane, buf, 0)
+            jax.block_until_ready(lg)
+            if i >= 1:
+                best = min(best, (time.perf_counter() - t0) * 1e3)
+        chunk_ms = best
+    return occs, step_ms, chunk_ms
+
+
 def profile_replica(rep: Replica, prompt_lens=(8, 32, 128),
-                    new_tokens: int = 8) -> AppProfile:
+                    new_tokens: int = 8,
+                    steps_per_point: int = 6) -> AppProfile:
     """Measure this replica's latency profile (the paper's pre-evaluation):
     prompt length plays the role of image-KB.  The base point is the
-    uncontended single-lane (batch-1) latency; contention past one lane is
-    far sub-linear because lanes share each step's weight streaming, but
-    the predictor keeps the paper's conservative linear model as an upper
-    bound (profile refresh from live occupancy is a ROADMAP item)."""
+    uncontended single-lane (batch-1) latency.  Contention is *measured*,
+    not modeled: ``measure_step_curve`` times the batched ``decode_step``
+    at every occupancy 1..slots, so the contention point at n is the base
+    latency plus the measured marginal step-time increase over
+    ``new_tokens`` decode steps — strongly sub-linear, because lanes share
+    each step's weight streaming.  The returned profile is in lane mode
+    (``step_curve`` set), so the DDS predictor charges a joining request
+    its prefill plus the measured step cadence at the post-join occupancy,
+    and the replica's decode loop keeps the curve fresh via
+    ``observe_step`` EWMA updates (the Update-Profile loop).
+
+    The size curve is built in *batched-engine* units — measured prefill
+    wall-clock per prompt length plus ``new_tokens`` steps at the measured
+    batched cadence — NOT from the sequential batch-1 reference loop,
+    whose per-token host syncs would inflate every lane-mode prediction
+    by the sequential/batched step-time gap."""
+    occs, step_ms, chunk_ms = measure_step_curve(rep, steps_per_point)
     times = []
     for s in prompt_lens:
-        req = Request(0, np.ones((s,), np.int32), new_tokens, 1e9)
-        t0 = time.perf_counter()
-        rep.generate_sequential(req)
-        times.append((time.perf_counter() - t0) * 1e3)
+        toks = jnp.asarray(np.ones((1, s), np.int32))
+        lg, _ = rep._prefill(rep.params, toks)      # warm this shape: keep
+        jax.block_until_ready(lg)                   # compile out of the
+        best = float("inf")                         # measurement (cold start
+        for _ in range(2):                          # is a Table III/IV
+            t0 = time.perf_counter()                # concern, not warm-run)
+            lg, _ = rep._prefill(rep.params, toks)
+            jax.block_until_ready(lg)
+            best = min(best, (time.perf_counter() - t0) * 1e3)
+        times.append(best + new_tokens * step_ms[0])
     base = times[0]
-    conc = [1.0, 2.0, 4.0]
-    cont = [base, base * 2.0, base * 4.0]
-    return AppProfile(
+    cont = [base + new_tokens * max(m - step_ms[0], 0.0) for m in step_ms]
+    prof = AppProfile(
         app_id="serve", base_ms=base,
-        contention=Curve(conc, cont),
+        contention=Curve(list(occs), cont),
         size_curve=Curve([float(s) for s in prompt_lens], times),
-        reference_size=float(prompt_lens[0]))
+        reference_size=float(prompt_lens[0]),
+        step_curve=Curve(list(occs), list(step_ms)),
+        tokens_per_task=float(new_tokens),
+        prefill_chunk_ms=chunk_ms,
+        prefill_chunk_tokens=float(rep.prefill_chunk_tokens
+                                   if rep._chunkable else 0))
+    return prof
 
 
 class ServingFleet:
     """DDS router over replicas.  ``source`` is the replica co-located with
-    the request origin (paper: Rasp1 next to the camera)."""
+    the request origin (paper: Rasp1 next to the camera).
 
-    def __init__(self, policy: Policy, source: str, coordinator: str):
+    Telemetry flows the paper's way: every replica runs an
+    ``UpdateProfilePublisher`` heartbeat that snapshots its (live-EWMA'd)
+    profile plus lane occupancy into the coordinator's
+    ``MaintainProfileTable``; routing reads *that* staleness-tolerant
+    table, not live replica state — level 1 (the source's own decision)
+    and the coordinator's self-view stay exact, peers are table views, so
+    the router scales without fanning a state RPC per request."""
+
+    def __init__(self, policy: Policy, source: str, coordinator: str,
+                 heartbeat_ms: float = 20.0):
         self.policy = policy
         self.source = source
         self.coordinator = coordinator
+        self.heartbeat_ms = heartbeat_ms
         self.replicas: Dict[str, Replica] = {}
         self.profiles: Dict[str, DeviceProfile] = {}
+        self.table = MaintainProfileTable()
+        self._publishers: Dict[str, UpdateProfilePublisher] = {}
         self.stats: Dict[str, int] = {}
+        self._lock = threading.Lock()    # guards membership dicts + stats
 
     def add_replica(self, rep: Replica, profile: Optional[AppProfile] = None,
                     link: Optional[LinkProfile] = None) -> None:
         prof = profile or profile_replica(rep)
-        self.replicas[rep.name] = rep
-        self.profiles[rep.name] = DeviceProfile(
+        rep.profile = prof              # decode loop feeds the UP loop
+        dev = DeviceProfile(
             rep.name, rep.slots, {"serve": prof},
             link or LinkProfile(bandwidth_kbps=1e6, rtt_ms=0.2))
+        pub = UpdateProfilePublisher(rep.name, dev, rep.state, self.table,
+                                     self.heartbeat_ms)
+        with self._lock:
+            self.replicas[rep.name] = rep
+            self.profiles[rep.name] = dev
+            self._publishers[rep.name] = pub
+        pub.start()
 
-    def _view(self, name: str) -> NodeView:
-        rep = self.replicas[name]
-        return NodeView(profile=self.profiles[name], state=rep.state(),
-                        free_slots=rep.free_slots())
+    def remove_replica(self, name: str) -> None:
+        with self._lock:
+            pub = self._publishers.pop(name, None)
+            self.profiles.pop(name, None)
+            rep = self.replicas.pop(name, None)
+        if pub:
+            pub.stop()
+        self.table.remove(name)
+        if rep:
+            rep.stop()
+
+    def stop(self) -> None:
+        with self._lock:
+            names = list(self.replicas)
+        for name in names:
+            self.remove_replica(name)
+
+    def _members(self) -> Dict[str, Replica]:
+        """Membership snapshot — routing must never iterate or index the
+        live dicts while remove_replica mutates them (same hardening as
+        core Fleet.submit)."""
+        with self._lock:
+            return dict(self.replicas)
+
+    def _view(self, name: str, rep: Replica, exact: bool = False) -> NodeView:
+        prof = self.profiles.get(name)
+        if prof is None:                # removed mid-route: live fallback
+            prof = DeviceProfile(name, rep.slots,
+                                 {"serve": rep.profile} if rep.profile else {})
+        if exact:
+            return NodeView(profile=prof, state=rep.state(),
+                            free_slots=rep.free_slots())
+        rec = self.table.get(name)
+        if rec is None:                 # no heartbeat yet: fall back to live
+            return NodeView(profile=prof, state=rep.state(),
+                            free_slots=rep.free_slots())
+        free = max(rep.slots - rec.state.running - rec.state.queued, 0)
+        return NodeView(profile=rec.profile, state=rec.state, free_slots=free)
 
     def route(self, req: Request) -> str:
         """Two-level DDS placement; returns chosen replica name."""
+        members = self._members()
+        return self._route(req, members)
+
+    def _route(self, req: Request, members: Dict[str, Replica]) -> str:
         now = time.monotonic() * 1e3
         task = Task(task_id=req.request_id, app_id="serve",
                     size_kb=float(len(req.prompt)), created_ms=req.created_ms
                     or now, constraint_ms=req.deadline_ms, source=self.source)
-        if self.policy.decide_source(task, now, self._view(self.source)) == "local":
+        source = members.get(self.source)
+        coordinator = members.get(self.coordinator)
+        if source is None or coordinator is None:
+            raise RuntimeError(
+                f"fleet has no {'source' if source is None else 'coordinator'}"
+                f" replica ({self.source if source is None else self.coordinator}"
+                " was removed)")
+        if self.policy.decide_source(
+                task, now, self._view(self.source, source, exact=True)) == LOCAL:
             return self.source
-        peers = {n: self._view(n) for n in self.replicas
+        peers = {n: self._view(n, r) for n, r in members.items()
                  if n not in (self.coordinator, self.source)}
         return self.policy.decide_coordinator(
-            task, now, self._view(self.coordinator), peers)
+            task, now, self._view(self.coordinator, coordinator, exact=True),
+            peers)
 
     def submit(self, req: Request) -> RequestResult:
         req.created_ms = req.created_ms or time.monotonic() * 1e3
-        name = self.route(req)
-        self.stats[name] = self.stats.get(name, 0) + 1
-        toks = self.replicas[name].generate(req)
+        members = self._members()
+        name = self._route(req, members)
+        with self._lock:
+            self.stats[name] = self.stats.get(name, 0) + 1
+        # a replica removed between route and generate raises the replica's
+        # explicit "stopped" RuntimeError — an accounted refusal, not a
+        # random KeyError from a mutating dict
+        toks = members[name].generate(req)
         return RequestResult(req.request_id, toks, time.monotonic() * 1e3,
                              name, req.created_ms)

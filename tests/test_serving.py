@@ -214,10 +214,85 @@ def test_stop_unblocks_in_flight_requests(small_setup):
 
 def test_profile_preevaluation_size_scaling(small_setup):
     cfg, params, rep = small_setup
-    prof = fleetless_profile = None
     from repro.serving.engine import profile_replica
     prof = profile_replica(rep, prompt_lens=(8, 16), new_tokens=2)
     assert prof.base_ms > 0
     # predictor is usable by the DDS latency model
     t = prof.process_time(16.0, 1)
     assert t > 0
+
+
+def test_profile_replica_contention_is_measured(small_setup):
+    """The contention curve comes from timing the batched decode_step at
+    every occupancy — NOT the old hard-coded [base, base*2, base*4]
+    linear model.  Lanes share each step's weight streaming, so the
+    measured curve must be far below linear."""
+    cfg, params, rep = small_setup
+    from repro.serving.engine import profile_replica
+    prof = profile_replica(rep, prompt_lens=(8,), new_tokens=2)
+    assert prof.lane_mode
+    assert prof.step_curve is not None
+    assert prof.step_curve.xs == [float(n) for n in range(1, rep.slots + 1)]
+    assert all(y > 0 for y in prof.step_curve.ys)
+    assert prof.tokens_per_task == 2.0
+    # measured sub-linearity: occupying every lane must not cost anywhere
+    # near slots * base (the old fabricated upper bound)
+    assert prof.contention(float(rep.slots)) < 1.5 * prof.base_ms
+    # and the predictor prices a busy join at the marginal step cost
+    busy = prof.process_time(8.0, rep.slots)
+    idle = prof.process_time(8.0, 1)
+    assert busy < 1.5 * idle
+
+
+def test_decode_loop_feeds_profile_observations(small_setup):
+    """The replica's decode loop must EWMA live (occupancy, step_ms)
+    samples into its attached profile — the paper's Update-Profile loop."""
+    cfg, params, _ = small_setup
+    from repro.core.profile import AppProfile, Curve
+    rep = Replica("uploop", cfg, params, slots=2, capacity=64,
+                  prefill_chunk_tokens=8)
+    # attach a profile with sentinel step values the EWMA must move off
+    prof = AppProfile(
+        app_id="serve", base_ms=100.0,
+        contention=Curve([1.0, 2.0], [100.0, 100.0]),
+        size_curve=Curve([8.0, 16.0], [100.0, 120.0]),
+        reference_size=8.0,
+        step_curve=Curve([1.0, 2.0], [12345.0, 12345.0]),
+        tokens_per_task=4.0, prefill_chunk_ms=0.0)
+    rep.profile = prof
+    rep.generate(Request(0, np.arange(2, 12, dtype=np.int32), 8, 1e9))
+    assert prof.step_curve(1) != 12345.0      # live samples arrived
+    assert prof.prefill_chunk_ms > 0.0        # chunk interleave cost too
+    rep.stop()
+
+
+def test_serving_fleet_routes_from_mp_table(small_setup):
+    """ServingFleet must publish replica profiles+state over the UP
+    heartbeat and route off the MP table (staleness-tolerant), with the
+    published profile a snapshot decoupled from the live EWMA'd one."""
+    cfg, params, _ = small_setup
+    from repro.core.policies import make_policy as mk
+    rep = Replica("mp0", cfg, params, slots=2, capacity=64)
+    fleet = ServingFleet(mk("DDS"), source="mp0", coordinator="mp0",
+                         heartbeat_ms=10.0)
+    fleet.add_replica(rep)
+    try:
+        rec = fleet.table.get("mp0")
+        assert rec is not None                # heartbeat published
+        live = fleet.profiles["mp0"].apps["serve"]
+        assert rec.profile.apps["serve"] is not live     # snapshot
+        # a live EWMA update reaches the table within a heartbeat or two
+        live.observe_step(1, 98765.0)
+        deadline = time.time() + 2.0
+        while time.time() < deadline:
+            got = fleet.table.get("mp0").profile.apps["serve"].step_curve(1)
+            if got != rec.profile.apps["serve"].step_curve(1):
+                break
+            time.sleep(0.01)
+        assert got != rec.profile.apps["serve"].step_curve(1)
+        # routing still works end-to-end off the table view
+        res = fleet.submit(Request(9, np.arange(2, 8, dtype=np.int32), 2, 1e9))
+        assert res.replica == "mp0"
+        assert len(res.tokens) == 2
+    finally:
+        fleet.stop()

@@ -1,0 +1,303 @@
+"""Update-Profile loop regressions (no JAX needed — pure scheduler core):
+
+  * ``measure_profile`` contention semantics — average *per-task* runtime
+    at concurrency n (Table V/VI), repeated and aggregated like the size
+    curve, monotone non-decreasing in n;
+  * profile-mutation race — UP-loop EWMA writers vs predictor readers vs
+    heartbeat publishers must never tear a curve, and published profiles
+    are snapshots decoupled from later mutation;
+  * ``Fleet.submit`` vs ``remove_worker`` race — elastic scale-in
+    mid-submit must account the task lost, never KeyError;
+  * lane-occupancy routing — a busy batched replica with a measured
+    sub-linear step curve is preferred over a cold remote that the old
+    hard-coded linear contention model would have chosen.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.latency import (NodeState, Task, predict_process_ms,
+                                predict_queue_ms, predict_total_ms)
+from repro.core.node import Worker
+from repro.core.policies import DDS, NodeView, make_policy
+from repro.core.profile import (FACE, AppProfile, Curve, DeviceProfile,
+                                LinkProfile, measure_profile,
+                                paper_raspberry_pi)
+from repro.core.scheduler import Fleet
+from repro.core.telemetry import MaintainProfileTable, UpdateProfilePublisher
+
+
+# --------------------------------------------- measure_profile semantics
+def test_measure_profile_average_per_task_contention():
+    """A lock-serialized step (task i waits i*t, then runs t) has average
+    per-task runtime (n+1)/2 * t at concurrency n — NOT the n*t batch
+    wall-clock the old divide-by-1.0 recorded."""
+    t_ms = 20.0
+    gate = threading.Lock()
+
+    def step_fn(size):
+        with gate:
+            time.sleep(t_ms / 1e3)
+
+    prof = measure_profile("locked", step_fn, sizes=(1, 2, 3),
+                           concurrencies=(1, 2, 4), reps=2)
+    c4 = prof.contention(4)
+    # per-task average for n=4 is 2.5*t; batch wall-clock is 4*t.  Allow
+    # generous scheduling noise but reject the old wall-clock semantics.
+    assert c4 >= 1.5 * t_ms
+    assert c4 < 3.6 * t_ms, f"contention(4)={c4:.1f}ms looks like batch wall-clock"
+    # monotone non-decreasing in n (enforced + asserted by measure_profile)
+    ys = prof.contention.ys
+    assert all(a <= b for a, b in zip(ys, ys[1:]))
+
+
+def test_measure_profile_parallel_work_is_sublinear():
+    """Truly parallel work (sleep releases the GIL) must profile ~flat —
+    the divisor bug would have made it look linear in n."""
+    def step_fn(size):
+        time.sleep(0.01)
+
+    prof = measure_profile("parallel", step_fn, sizes=(1, 2, 3),
+                           concurrencies=(1, 4), reps=2)
+    assert prof.contention(4) < 2.5 * prof.contention(1)
+
+
+# ------------------------------------------------ profile-mutation race
+def _lane_profile(step_ms=(10.0, 10.5, 11.0, 11.5), tokens=50.0):
+    prefill = 20.0
+    base = prefill + tokens * step_ms[0]
+    return AppProfile(
+        app_id="serve", base_ms=base,
+        contention=Curve([1.0, 2.0, 3.0, 4.0],
+                         [base + tokens * (m - step_ms[0]) for m in step_ms]),
+        size_curve=Curve([8.0, 128.0],
+                         [prefill + tokens * step_ms[0],
+                          prefill + 120.0 + tokens * step_ms[0]]),
+        reference_size=8.0,
+        step_curve=Curve([1.0, 2.0, 3.0, 4.0], list(step_ms)),
+        tokens_per_task=tokens, prefill_chunk_ms=2.0)
+
+
+def test_published_profile_is_snapshot_not_reference():
+    prof = paper_raspberry_pi("node", slots=4)
+    table = MaintainProfileTable()
+    pub = UpdateProfilePublisher("node", prof, NodeState, table)
+    pub.publish_once()
+    rec = table.get("node")
+    assert rec.profile is not prof
+    assert rec.profile.apps[FACE] is not prof.apps[FACE]
+    before = rec.profile.apps[FACE].contention(1)
+    # UP-loop mutation after the heartbeat must not alter the published view
+    prof.apps[FACE].observe_runtime(10_000.0, concurrency=1)
+    assert table.get("node").profile.apps[FACE].contention(1) == before
+    assert prof.apps[FACE].contention(1) != before
+
+
+def test_concurrent_observe_publish_predict_hammer():
+    """EWMA writers, heartbeat copiers and predictor readers hammer one
+    AppProfile from four threads: no exception, no torn/non-finite read."""
+    dev = DeviceProfile("rep", 4, {"serve": _lane_profile()})
+    table = MaintainProfileTable()
+    pub = UpdateProfilePublisher("rep", dev, NodeState, table)
+    task = Task(task_id=0, app_id="serve", size_kb=64.0, created_ms=0.0,
+                constraint_ms=1e9)
+    state = NodeState(running=3, queued=2)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        app = dev.apps["serve"]
+        i = 0
+        while not stop.is_set():
+            app.observe_step(1 + i % 4, 10.0 + (i % 7))
+            app.observe_runtime(500.0 + i % 50, 1 + i % 4, size=64.0)
+            app.observe_prefill_chunk(2.0 + i % 3)
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            t = predict_total_ms(dev, task, state, remote=True)
+            if not np.isfinite(t) or t <= 0:
+                errors.append(f"non-finite prediction {t}")
+                return
+
+    def publisher():
+        while not stop.is_set():
+            pub.publish_once()
+            rec = table.get("rep")
+            if not np.isfinite(rec.profile.apps["serve"].contention(4)):
+                errors.append("published torn curve")
+                return
+
+    threads = [threading.Thread(target=f)
+               for f in (writer, writer, reader, publisher)]
+    try:
+        for t in threads:
+            t.start()
+        time.sleep(0.4)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=5.0)
+    assert not errors, errors
+    assert not any(t.is_alive() for t in threads), "hammer thread deadlocked"
+
+
+# ------------------------------------- Fleet.submit vs remove_worker race
+def _fast_fleet(policy="JSQ"):
+    fleet = Fleet(make_policy(policy), source="rasp1",
+                  coordinator="edge_server", heartbeat_ms=5,
+                  required_apps=[FACE])
+
+    def work(task):
+        time.sleep(0.001)
+        return task.task_id
+
+    from repro.core.profile import paper_edge_server
+    fleet.add_worker(Worker(paper_raspberry_pi("rasp1", 2), {FACE: work}))
+    fleet.add_worker(Worker(paper_edge_server(4), {FACE: work}))
+    fleet.start()
+    return fleet, work
+
+
+def test_submit_during_remove_worker_never_crashes():
+    """Elastic scale-in racing a submit loop: routing must never KeyError;
+    a task routed at a vanished node is accounted lost."""
+    fleet, work = _fast_fleet("JSQ")   # JSQ always consults every peer
+    errors = []
+    done = threading.Event()
+
+    def churn():
+        try:
+            for i in range(30):
+                w = Worker(paper_raspberry_pi("rasp2", 2), {FACE: work})
+                fleet.add_worker(w)
+                w.start()
+                fleet._publishers["rasp2"].start()
+                time.sleep(0.002)
+                fleet.remove_worker("rasp2")
+        except Exception as e:          # noqa: BLE001
+            errors.append(f"churn: {type(e).__name__}: {e}")
+        finally:
+            done.set()
+
+    def submitter():
+        i = 0
+        try:
+            while not done.is_set():
+                t = Task(task_id=i, app_id=FACE, size_kb=29.0,
+                         created_ms=time.monotonic() * 1e3,
+                         constraint_ms=5000.0, source="rasp1")
+                fleet.submit(t)
+                i += 1
+        except Exception as e:          # noqa: BLE001
+            errors.append(f"submit: {type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=churn)] + \
+        [threading.Thread(target=submitter) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    try:
+        assert not errors, errors
+        assert not any(t.is_alive() for t in threads)
+        # accounting stays closed: everything submitted is either placed,
+        # rejected, or lost
+        s = fleet.stats
+        assert s.submitted == sum(s.placements.values()) + s.rejected + s.lost
+    finally:
+        fleet.stop()
+
+
+def test_stopped_worker_refuses_submit():
+    w = Worker(paper_raspberry_pi("rasp9", 2), {FACE: lambda t: None})
+    w.start()
+    w.stop()
+    assert w.stopped
+    t = Task(task_id=0, app_id=FACE, size_kb=29.0, created_ms=0.0,
+             constraint_ms=1e9, source="rasp9")
+    assert w.submit(t) is False
+
+
+# ------------------------------------------- lane-occupancy routing
+def _linear_profile(tokens=50.0):
+    """The old fabricated curve: cont = [base, base*2, base*4]."""
+    base = 20.0 + tokens * 10.0
+    p = _lane_profile()
+    return AppProfile(
+        app_id="serve", base_ms=base,
+        contention=Curve([1.0, 2.0, 4.0], [base, base * 2.0, base * 4.0]),
+        size_curve=p.size_curve.copy(), reference_size=8.0)
+
+
+def _views(app_busy):
+    """One busy batched replica (3/4 lanes), one cold but slow-linked
+    remote, a loaded coordinator."""
+    fast = LinkProfile(bandwidth_kbps=1e6, rtt_ms=0.2)
+    slow = LinkProfile(bandwidth_kbps=100.0, rtt_ms=30.0)  # ~400ms transfer
+    busy = NodeView(
+        profile=DeviceProfile("busy", 4, {"serve": app_busy}, fast),
+        state=NodeState(running=3, queued=0), free_slots=1)
+    cold = NodeView(
+        profile=DeviceProfile("cold", 4, {"serve": _lane_profile()}, slow),
+        state=NodeState(running=0, queued=0), free_slots=4)
+    coord = NodeView(
+        profile=DeviceProfile("coord", 4, {"serve": _lane_profile()}, fast),
+        state=NodeState(running=4, queued=8), free_slots=0)
+    return coord, {"busy": busy, "cold": cold}
+
+
+def test_dds_prefers_busy_batched_replica_with_measured_curve():
+    """The headline behavior change: with the measured sub-linear step
+    curve, joining the 3-lanes-busy replica costs ~tokens * step(4) — far
+    cheaper than shipping to a cold remote over a slow link.  The old
+    linear contention curve predicted 4x the base runtime for the same
+    join and sent the request away."""
+    task = Task(task_id=1, app_id="serve", size_kb=64.0,
+                created_ms=0.0, constraint_ms=60_000.0, source="src")
+    dds = DDS()
+
+    coord, peers = _views(_lane_profile())
+    assert dds.decide_coordinator(task, 0.0, coord, peers) == "busy"
+
+    coord, peers = _views(_linear_profile())
+    assert dds.decide_coordinator(task, 0.0, coord, peers) == "cold"
+
+
+def test_lane_mode_predictor_charges_marginal_step_cost():
+    app = _lane_profile(step_ms=(10.0, 10.5, 11.0, 11.5), tokens=50.0)
+    dev = DeviceProfile("rep", 4, {"serve": app})
+    task = Task(task_id=0, app_id="serve", size_kb=8.0, created_ms=0.0,
+                constraint_ms=1e9)
+    # joining at occupancy 3 -> 4: prefill + 50 steps at the measured
+    # occupancy-4 cadence, NOT 4x the contended per-task runtime
+    t = predict_process_ms(dev, task, NodeState(running=3))
+    assert t == pytest.approx(20.0 + 50.0 * 11.5)
+    assert t < 2.0 * app.process_time(8.0, 1)
+    # queue estimate: one task's worth of full-occupancy steps per wave,
+    # plus the chunked-prefill interleave each queued prompt costs
+    q = predict_queue_ms(dev, task, NodeState(running=4, queued=4))
+    assert q == pytest.approx(1.0 * 50.0 * 11.5 + 4 * app.prefill_chunk_ms)
+    # a long prompt interleaves ceil(L / chunk_tokens) chunks, not one
+    app.prefill_chunk_tokens = 32.0
+    long_task = Task(task_id=1, app_id="serve", size_kb=256.0,
+                     created_ms=0.0, constraint_ms=1e9)
+    q_long = predict_queue_ms(dev, long_task, NodeState(running=4, queued=4))
+    assert q_long == pytest.approx(1.0 * 50.0 * 11.5
+                                   + 4 * 8 * app.prefill_chunk_ms)
+
+
+def test_lane_mode_profile_copy_roundtrip():
+    app = _lane_profile()
+    app.prefill_chunk_tokens = 32.0
+    cp = app.copy()
+    assert cp.lane_mode
+    assert cp.step_curve.ys == app.step_curve.ys
+    assert cp.tokens_per_task == app.tokens_per_task
+    assert cp.prefill_chunk_ms == app.prefill_chunk_ms
+    assert cp.prefill_chunk_tokens == 32.0
+    cp.observe_step(4, 99.0)
+    assert app.step_curve(4) != cp.step_curve(4)
