@@ -3,8 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
 benchmark itself; derived = the headline metric checked against the paper).
 Serving benches additionally write ``BENCH_serving.json`` (tokens/sec at
-concurrency 1/4, routing deadline-hit rate, the measured step curve) so the
-serving perf trajectory is tracked across PRs.
+concurrency 1/4, routing deadline-hit rate, the measured per-occupancy step
+curves — single-device and mesh-replica) so the serving perf trajectory is
+tracked across PRs.
 
   PYTHONPATH=src python -m benchmarks.run                  # paper suite
   PYTHONPATH=src python -m benchmarks.run --live           # + live profiling
@@ -174,15 +175,78 @@ def bench_serving_routing():
         "deadline_hit_rate": round(hit, 3),
         "placements": dict(fleet.stats),
     }
+    # step_ms_by_occupancy IS the measured contention signal in lane mode
+    # (the derived end-to-end contention curve is base + tokens x marginal
+    # step cost — flat whenever the marginal cost is sub-timer-resolution,
+    # which read as a fabricated constant in earlier BENCH_serving.json)
     SERVING_METRICS["profile"] = {
         "step_ms_by_occupancy": [round(y, 3) for y in prof.step_curve.ys],
-        "contention_ms": [round(y, 1) for y in prof.contention.ys],
         "prefill_chunk_ms": round(prof.prefill_chunk_ms, 3),
         "base_ms": round(prof.base_ms, 1),
     }
     rows = [{"deadline_hit_rate": hit, "requests": n_requests}]
     return rows, (f"hit_rate={hit:.2f} deadline={deadline_ms:.0f}ms "
                   f"step_ms={[round(y, 2) for y in prof.step_curve.ys]}")
+
+
+def bench_serving_mesh_step_curve():
+    """Lane-occupancy step curve of a SHARDED replica: a subprocess with
+    fake host devices builds a Replica on a (1, 4) serving mesh — its
+    decode steps run the split-S distributed flash-decode with the
+    per-lane index vector — and times ``measure_step_curve``, so
+    BENCH_serving.json tracks the distributed step cadence alongside the
+    single-device one.  A subprocess because the host device count must
+    be pinned via XLA_FLAGS before jax initializes (the parent already
+    holds a default client)."""
+    import subprocess
+
+    code = """
+import json
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving.engine import Replica, Request, measure_step_curve
+import numpy as np
+
+cfg = get_smoke_config("granite-8b").replace(param_dtype=jnp.float32,
+                                             dtype=jnp.float32)
+params = M.init_model(jax.random.PRNGKey(0), cfg)
+mesh = jax.make_mesh((1, 4), ("data", "model"))
+rep = Replica("mesh0", cfg, params, slots=4, capacity=128,
+              serving_mesh=mesh)
+occs, step_ms, chunk_ms = measure_step_curve(rep, steps_per_point=4)
+# and one end-to-end request through the batched loop on the mesh
+toks = rep.generate(Request(0, np.arange(2, 10, dtype=np.int32), 4, 1e9))
+rep.stop()
+print(json.dumps({
+    "mesh": {k: int(v) for k, v in mesh.shape.items()},
+    "occupancy": occs,
+    "step_ms_by_occupancy": [round(y, 3) for y in step_ms],
+    "prefill_chunk_ms": round(chunk_ms, 3),
+    "tokens_decoded": int(len(toks)),
+}))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    env.setdefault("REPRO_KERNEL_IMPL", "jnp")
+    # fake host devices exist on the CPU backend only: without this, a
+    # host with an accelerator would initialize that backend and the
+    # (1, 4) mesh would not have 4 devices to build from
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["tokens_decoded"] == 4, rec
+    SERVING_METRICS["mesh_profile"] = rec
+    rows = [{"occupancy": o, "step_ms": m}
+            for o, m in zip(rec["occupancy"], rec["step_ms_by_occupancy"])]
+    return rows, (f"mesh={rec['mesh']} "
+                  f"step_ms={rec['step_ms_by_occupancy']}")
 
 
 def live_profile_bench():
@@ -228,7 +292,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     serving = [("bench_serving_throughput", bench_serving_throughput),
-               ("bench_serving_routing", bench_serving_routing)]
+               ("bench_serving_routing", bench_serving_routing),
+               ("bench_serving_mesh_step_curve", bench_serving_mesh_step_curve)]
     if args.serving_smoke:
         benches = serving
     else:

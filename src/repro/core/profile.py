@@ -51,6 +51,14 @@ def _interp(xs: Sequence[float], ys: Sequence[float], x: float) -> float:
 class Curve:
     """A measured 1-D curve with EWMA-updatable points.
 
+    ``xs`` are the measured sample positions (concurrency levels, input
+    sizes, lane occupancies); ``ys`` the measured values (ms).  Reads
+    interpolate piecewise-linearly between points and extrapolate
+    linearly beyond them; ``observe`` folds a live sample into the
+    nearest measured point with weight ``ewma`` (0.25: a new sample
+    moves the point a quarter of the way — the paper's Update-Profile
+    smoothing).
+
     ``observe`` (UP-loop writers) and ``__call__``/``copy`` (predictor and
     heartbeat readers) run on different threads, so every access takes the
     curve's lock — EWMA updates can never tear an interpolation read or a
@@ -81,7 +89,29 @@ class Curve:
 # ------------------------------------------------------------------- profiles
 @dataclass
 class AppProfile:
-    """Processing-time model for one application on one device."""
+    """Processing-time model for one application on one device.
+
+    Two prediction modes share this dataclass:
+
+    * **process-per-slot** (the paper's containers): ``contention`` maps
+      concurrency -> measured average runtime (Tables V/VI), with
+      ``size_curve``/``load_curve`` multiplicative corrections relative
+      to ``base_ms`` at ``reference_size``.
+    * **lane mode** (batched serving replicas, ``lane_mode`` True):
+      ``step_curve`` maps lane occupancy -> measured batched
+      ``decode_step`` wall-clock, ``tokens_per_task`` is the reference
+      decode length the size curve was built with, and
+      ``prefill_chunk_ms``/``prefill_chunk_tokens`` carry the measured
+      chunked-prefill interleave cost.  A joining task is then priced as
+      its prefill plus ``tokens_per_task`` steps at the post-join
+      occupancy's cadence — strongly sub-linear, because lanes share
+      each step's weight streaming.
+
+    All curves are EWMA-updated from live observations
+    (``observe_runtime`` / ``observe_step`` / ``observe_prefill_chunk``
+    — the paper's Update-Profile loop) and snapshotted per heartbeat via
+    ``copy``.
+    """
 
     app_id: str
     base_ms: float                       # 1 warm slot, idle, reference size

@@ -4,6 +4,11 @@ pre-evaluation -> two-level DDS routing -> SLO accounting.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
       --requests 16 --policy DDS
+
+Per-request sampling rides on the request: ``--temperature/--top-k/--top-p``
+set the knobs for every generated request (0 temperature = greedy), and
+``--sample-seed`` fixes the PRNG root so a rerun reproduces the exact token
+streams (each request i uses ``sample_seed + i``).
 """
 from __future__ import annotations
 
@@ -48,6 +53,14 @@ def main():
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--policy", default="DDS",
                     choices=["DDS", "DDS_EDF", "AOR", "AOE", "EODS", "JSQ"])
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k filter (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus (top-p) filter (1 = disabled)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="PRNG root; request i samples with seed+i")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -60,7 +73,9 @@ def main():
         for i in range(args.requests):
             prompt = rng.integers(2, cfg.vocab_size,
                                   size=(args.prompt_len,)).astype(np.int32)
-            req = Request(i, prompt, args.new_tokens, args.deadline_ms)
+            req = Request(i, prompt, args.new_tokens, args.deadline_ms,
+                          temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p, seed=args.sample_seed + i)
             futs.append(ex.submit(fleet.submit, req))
             time.sleep(args.interval_ms / 1e3)
         results = [f.result() for f in futs]

@@ -140,16 +140,14 @@ def apply_block_decode(p, x, cache, cfg: ModelConfig, kind: str, attn_kind: str,
         from repro.sharding import context as shctx
         serving = shctx.get_serving_mesh()
         if serving is not None:
-            if cache_index.ndim:
-                raise NotImplementedError(
-                    "per-lane cache_index with a serving mesh (spmd decode) "
-                    "is a follow-on; pass a scalar cache_index")
-            # explicitly distributed split-S flash-decode (§Perf iter 2)
+            # explicitly distributed split-S flash-decode (§Perf iter 2);
+            # the per-lane (B,) index vector goes straight down — scalar
+            # and vector callers share this one path
             from repro.serving.spmd_decode import spmd_decode_attention
             mesh, b_ax, s_ax = serving
             out, k_cache, v_cache, pos = spmd_decode_attention(
                 mesh, q, cache["k"], cache["v"], k, v, cache["pos"],
-                cache_index, window=window, scale=scale,
+                idx, window=window, scale=scale,
                 softcap=cfg.logit_softcap, batch_axis=b_ax, seq_axis=s_ax)
         else:
             slots = jax.lax.rem(idx, n)                        # (B,)

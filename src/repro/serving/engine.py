@@ -23,12 +23,24 @@ The paper's architecture, realized for model serving:
     per-lane ``cache_len`` vector.  Requests join and leave at lane
     granularity *between* decode steps — no batch flush, no padding to a
     common length.  Every step is ONE jitted ``decode_step`` over all
-    lanes (per-lane positions down to the attention kernel), with a
-    batched on-device argmax and a single small ``(slots,)`` token
-    transfer per step — not a per-request, per-token host sync.  Prompt
-    prefill is chunked (``prefill_chunk_tokens``) and interleaved between
-    decode steps so a newly arrived long prompt cannot stall in-flight
-    decodes for more than one chunk.
+    lanes (per-lane positions down to the attention kernel), with
+    batched on-device token selection and a single small ``(slots,)``
+    token transfer per step — not a per-request, per-token host sync.
+    Prompt prefill is chunked (``prefill_chunk_tokens``) and interleaved
+    between decode steps so a newly arrived long prompt cannot stall
+    in-flight decodes for more than one chunk.
+  * token selection is **per-lane**: each request carries its own
+    temperature / top-k / top-p / seed (``Request`` fields), each lane
+    carries its own PRNG key (split once per generated token, prefill's
+    first token included), and greedy + sampled requests mix in one
+    batched step (``repro.serving.sampling``).  Lane b's sampled stream
+    depends only on lane b's key, so joins elsewhere in the batch never
+    perturb it (test-enforced, like greedy parity).
+  * a replica may be **sharded**: pass ``serving_mesh`` and every decode
+    step runs the split-S distributed flash-decode
+    (``repro.serving.spmd_decode``) with the per-lane index vector —
+    a multi-chip replica is the same first-class continuous-batching
+    target for the DDS router as a single-chip one.
 
 Batched lanes amortize the weight streaming that dominates memory-bound
 decode: at occupancy L the weights are read once per step instead of L
@@ -41,6 +53,7 @@ the scheduler logic is identical (it only sees profiles + telemetry).
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from collections import deque
@@ -57,16 +70,28 @@ from repro.core.policies import LOCAL, NodeView, Policy
 from repro.core.profile import AppProfile, Curve, DeviceProfile, LinkProfile
 from repro.core.telemetry import MaintainProfileTable, UpdateProfilePublisher
 from repro.models import model as model_lib
+from repro.serving import sampling as sampling_lib
 
 
 @dataclass
 class Request:
+    """One serving request: a prompt, a decode budget, an SLO deadline —
+    and per-request sampling knobs.  ``temperature <= 0`` (the default)
+    means greedy; otherwise tokens are drawn from the
+    temperature-scaled, top-k/top-p-filtered distribution with a PRNG
+    stream rooted at ``seed`` (default: the request id), so a fixed seed
+    reproduces the exact token stream regardless of batch traffic."""
+
     request_id: int
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int
     deadline_ms: float              # SLO: end-to-end completion deadline
     created_ms: float = 0.0
     enc: Optional[np.ndarray] = None
+    temperature: float = 0.0        # <= 0: greedy
+    top_k: int = 0                  # 0: disabled
+    top_p: float = 1.0              # >= 1: disabled
+    seed: Optional[int] = None      # PRNG root; None -> request_id
 
 
 @dataclass
@@ -88,7 +113,7 @@ class _Job:
     """One request's life inside the batched decoder."""
 
     __slots__ = ("req", "lane", "lane_cache", "consumed", "out", "remaining",
-                 "done")
+                 "done", "key")
 
     def __init__(self, req: Request):
         self.req = req
@@ -98,6 +123,15 @@ class _Job:
         self.out: List[int] = []
         self.remaining = req.max_new_tokens
         self.done = threading.Event()
+        # per-lane PRNG root: sampled requests get a key derived only from
+        # the request (never from batch state), split once per token
+        self.key = (sampling_lib.make_lane_key(
+            req.seed if req.seed is not None else req.request_id)
+            if req.temperature > 0.0 else None)
+
+    @property
+    def sampled(self) -> bool:
+        return self.key is not None
 
 
 class Replica:
@@ -109,13 +143,35 @@ class Replica:
       1. admit: waiting requests claim free lanes;
       2. prefill one chunk of at most one admitted prompt into its private
          B=1 lane cache (bounds the stall it can impose on step 3);
-      3. decode: one jitted ``decode_step`` over ALL active lanes with the
-         per-lane index vector; on-device batched argmax; one ``(slots,)``
-         host transfer; finished lanes retire and free their slot.
+      3. decode: one jitted step over ALL active lanes with the per-lane
+         index vector; on-device batched token selection (argmax for an
+         all-greedy batch, per-lane key-split sampling when any active
+         lane carries ``temperature > 0``); one ``(slots,)`` host
+         transfer; finished lanes retire and free their slot.
 
-    Weights + jitted prefill/decode/insert executables are built (and
-    compiled) at construction.  Chunked prefill always runs the one fixed
-    ``(1, prefill_chunk_tokens)`` shape (final partial chunks are
+    Construction knobs:
+
+    * ``slots`` — decode lanes (max concurrent requests in the batch);
+    * ``capacity`` — KV ring depth per lane (tokens);
+    * ``prefill_chunk_tokens`` — chunked-prefill piece size (the bound on
+      how long a joining prompt may stall in-flight decodes);
+    * ``serving_mesh`` (+ ``mesh_batch_axis``/``mesh_seq_axis``) — when
+      set, every decode step runs the explicitly distributed split-S
+      flash-decode over that mesh (``repro.serving.spmd_decode``) with
+      the same per-lane index vector: a sharded multi-chip replica
+      behaves exactly like a single-chip one to the router and the
+      continuous-batching loop.
+
+    Attributes maintained for the DDS loops: ``profile`` is the
+    lane-mode ``AppProfile`` attached by ``ServingFleet.add_replica``
+    (or ``profile_replica``); the decode loop EWMAs live
+    (occupancy, step_ms) and chunk-cost samples into it — the paper's
+    Update-Profile writer.  ``state()``/``free_slots()`` are the
+    telemetry the UP heartbeat publishes.
+
+    Weights + jitted prefill/decode/insert/sample executables are built
+    (and compiled) at construction.  Chunked prefill always runs the one
+    fixed ``(1, prefill_chunk_tokens)`` shape (final partial chunks are
     zero-padded, then ``trim_cache`` invalidates the pad positions), so
     for attention-only stacks serving never compiles.  Stacks without
     chunked-prefill support (recurrent mixers) and prompts whose padded
@@ -124,15 +180,18 @@ class Replica:
     """
 
     def __init__(self, name: str, cfg: ModelConfig, params, *,
-                 slots: int = 2, capacity: int = 256, greedy: bool = True,
-                 prefill_chunk_tokens: int = 32):
+                 slots: int = 2, capacity: int = 256,
+                 prefill_chunk_tokens: int = 32, serving_mesh=None,
+                 mesh_batch_axis: Optional[str] = "data",
+                 mesh_seq_axis: str = "model"):
         self.name = name
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
         self.slots = slots
-        self.greedy = greedy
         self.prefill_chunk_tokens = max(int(prefill_chunk_tokens), 1)
+        self.serving_mesh = serving_mesh
+        self._mesh_axes = (mesh_batch_axis, mesh_seq_axis)
         self._chunkable = model_lib.supports_chunked_prefill(cfg)
         # UP loop: set by ServingFleet.add_replica / profile_replica; the
         # decode loop EWMAs live (occupancy, step_ms) samples into it
@@ -159,41 +218,85 @@ class Replica:
             lambda p, cache, tok, idx: model_lib.decode_step(
                 p, cache, tok, idx, cfg))
         self._step = jax.jit(self._step_impl)
+        self._step_sampled = jax.jit(self._step_sampled_impl)
+        self._sample_first = jax.jit(sampling_lib.sample_lane_tokens)
         self._insert = jax.jit(self._insert_impl)
 
-        # persistent batched decode state (device) + tiny host mirrors
+        # persistent batched decode state (device) + tiny host mirrors:
+        # next token, KV index, PRNG key and sampling knobs per lane
         self._cache = model_lib.init_cache(cfg, slots, capacity)
         self._tok = np.zeros((slots, 1), np.int32)
         self._idx = np.zeros((slots,), np.int32)
+        self._keys = np.zeros((slots, 2), np.uint32)
+        self._temp = np.zeros((slots,), np.float32)
+        self._topk = np.zeros((slots,), np.int32)
+        self._topp = np.ones((slots,), np.float32)
 
         t0 = time.perf_counter()
-        dummy = jnp.zeros((1, 8), jnp.int32)
-        logits, lane_cache = self._prefill(params, dummy)
-        if self._chunkable and self.prefill_chunk_tokens <= capacity:
-            lane0 = model_lib.init_cache(cfg, 1, capacity)
-            _, lane0 = self._prefill_chunk(
-                params, lane0,
-                jnp.zeros((1, self.prefill_chunk_tokens), jnp.int32), 0)
-            lane_cache = self._trim(lane0, 8)
-        self._cache = self._insert(self._cache, lane_cache, 0)
-        nxt, self._cache = self._step(params, self._cache,
-                                      jnp.asarray(self._tok),
-                                      jnp.asarray(self._idx))
-        nxt.block_until_ready()
-        self._cache = model_lib.init_cache(cfg, slots, capacity)
+        with self._mesh_scope():
+            dummy = jnp.zeros((1, 8), jnp.int32)
+            logits, lane_cache = self._prefill(params, dummy)
+            if self._chunkable and self.prefill_chunk_tokens <= capacity:
+                lane0 = model_lib.init_cache(cfg, 1, capacity)
+                _, lane0 = self._prefill_chunk(
+                    params, lane0,
+                    jnp.zeros((1, self.prefill_chunk_tokens), jnp.int32), 0)
+                lane_cache = self._trim(lane0, 8)
+            self._cache = self._insert(self._cache, lane_cache, 0)
+            nxt, self._cache = self._step(params, self._cache,
+                                          jnp.asarray(self._tok),
+                                          jnp.asarray(self._idx))
+            nxt.block_until_ready()
+            # warm the sampled step + the B=1 first-token sampler too:
+            # a sampled request must not pay a compile on the request path
+            nxt, keys, self._cache = self._step_sampled(
+                params, self._cache, jnp.asarray(self._tok),
+                jnp.asarray(self._idx), jnp.asarray(self._keys),
+                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp))
+            nxt.block_until_ready()
+            self._sample_first(
+                jnp.zeros((1, 2), jnp.uint32),
+                jnp.zeros((1, cfg.vocab_size), jnp.float32),
+                jnp.ones((1,), jnp.float32), jnp.zeros((1,), jnp.int32),
+                jnp.ones((1,), jnp.float32))[1].block_until_ready()
+            self._cache = model_lib.init_cache(cfg, slots, capacity)
         self.warmup_s = time.perf_counter() - t0
 
         self._thread = threading.Thread(
             target=self._loop, name=f"decode-{name}", daemon=True)
         self._thread.start()
 
+    def _mesh_scope(self):
+        """Serving-mesh context for whatever thread is about to trace or
+        run decode executables (the context is thread-local, and the
+        decode loop runs on its own thread)."""
+        if self.serving_mesh is None:
+            return contextlib.nullcontext()
+        from repro.sharding import context as shctx
+        return shctx.serving_mesh(self.serving_mesh,
+                                  batch_axis=self._mesh_axes[0],
+                                  seq_axis=self._mesh_axes[1])
+
     # ---------------------------------------------------- jitted executables
     def _step_impl(self, params, cache, tok, idx):
-        """One batched decode step: per-lane positions, on-device argmax."""
+        """One batched greedy decode step: per-lane positions, on-device
+        argmax.  The all-greedy hot path — no sort/sampling work."""
         logits, cache = model_lib.decode_step(params, cache, tok, idx,
                                               self.cfg)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # (slots,)
         return nxt, cache
+
+    def _step_sampled_impl(self, params, cache, tok, idx, keys, temp, topk,
+                           topp):
+        """One batched decode step with per-lane sampling: greedy lanes
+        (temp <= 0) still take argmax inside the same executable, sampled
+        lanes split their own key and draw from the filtered distribution."""
+        logits, cache = model_lib.decode_step(params, cache, tok, idx,
+                                              self.cfg)
+        keys, nxt = sampling_lib.sample_lane_tokens(keys, logits[:, -1],
+                                                    temp, topk, topp)
+        return nxt, keys, cache
 
     def _insert_impl(self, cache, lane_cache, lane):
         """Splice a finished B=1 prefill cache into lane ``lane`` of the
@@ -226,21 +329,23 @@ class Replica:
         return np.asarray(job.out, np.int32)
 
     def generate_sequential(self, req: Request) -> np.ndarray:
-        """Batch-1 reference decode (the pre-batching engine): whole-prompt
-        prefill + per-token jitted step with a host sync each token.  Kept
-        as the parity oracle and the benchmark baseline."""
-        prompt = jnp.asarray(req.prompt)[None, :]
-        logits, cache = self._prefill(self.params, prompt)
-        out = []
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        pos = prompt.shape[1]
-        for _ in range(req.max_new_tokens):
-            out.append(int(tok[0, 0]))
-            logits, cache = self._decode(self.params, cache, tok,
-                                         jnp.asarray(pos))
+        """Batch-1 reference greedy decode (the pre-batching engine):
+        whole-prompt prefill + per-token jitted step with a host sync each
+        token.  Kept as the parity oracle and the benchmark baseline."""
+        with self._mesh_scope():
+            prompt = jnp.asarray(req.prompt)[None, :]
+            logits, cache = self._prefill(self.params, prompt)
+            out = []
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            pos += 1
-        return np.asarray(out, np.int32)
+            pos = prompt.shape[1]
+            for _ in range(req.max_new_tokens):
+                out.append(int(tok[0, 0]))
+                logits, cache = self._decode(self.params, cache, tok,
+                                             jnp.asarray(pos))
+                tok = jnp.argmax(logits[:, -1],
+                                 axis=-1).astype(jnp.int32)[:, None]
+                pos += 1
+            return np.asarray(out, np.int32)
 
     def stop(self) -> None:
         with self._work:
@@ -250,6 +355,10 @@ class Replica:
 
     # ---------------------------------------------------- decode loop (thread)
     def _loop(self) -> None:
+        with self._mesh_scope():
+            self._loop_body()
+
+    def _loop_body(self) -> None:
         while True:
             with self._work:
                 while (not self._shutdown and not self._pending
@@ -319,8 +428,20 @@ class Replica:
             last = c - 1                    # last REAL position in the chunk
         if job.consumed < n:
             return
-        # prompt fully prefilled: splice the lane in and emit token 0
-        first = int(jnp.argmax(logits[0, last]))
+        # prompt fully prefilled: splice the lane in and emit token 0 —
+        # sampled from the prefill logits with the job's own key (one
+        # split, same discipline as every decode step), argmax otherwise
+        if job.sampled:
+            keys, tok0 = self._sample_first(
+                jnp.asarray(job.key[None]),
+                jnp.asarray(logits[0, last], jnp.float32)[None],
+                jnp.full((1,), job.req.temperature, jnp.float32),
+                jnp.full((1,), job.req.top_k, jnp.int32),
+                jnp.full((1,), job.req.top_p, jnp.float32))
+            first = int(tok0[0])
+            job.key = np.asarray(keys[0], np.uint32)
+        else:
+            first = int(jnp.argmax(logits[0, last]))
         if last >= 0:
             job.lane_cache = self._trim(job.lane_cache, n)
         self._cache = self._insert(self._cache, job.lane_cache, job.lane)
@@ -328,6 +449,18 @@ class Replica:
         lane = job.lane
         self._tok[lane, 0] = first
         self._idx[lane] = n
+        # lane sampling state: recycled lanes inherit nothing from the
+        # previous occupant
+        if job.sampled:
+            self._keys[lane] = job.key
+            self._temp[lane] = job.req.temperature
+            self._topk[lane] = job.req.top_k
+            self._topp[lane] = job.req.top_p
+        else:
+            self._keys[lane] = 0
+            self._temp[lane] = 0.0
+            self._topk[lane] = 0
+            self._topp[lane] = 1.0
         finished = False
         with self._work:
             self._prefilling.popleft()
@@ -339,13 +472,36 @@ class Replica:
             else:
                 self._lanes[lane] = job
         if finished:
+            # the job never joins the batch (its one token came from
+            # prefill): leave the freed lane in the cheap greedy state
+            self._temp[lane] = 0.0
+            self._topk[lane] = 0
+            self._topp[lane] = 1.0
             job.done.set()
 
     def _decode_step(self, active: List[int]) -> None:
         t0 = time.perf_counter()
-        nxt, self._cache = self._step(self.params, self._cache,
-                                      jnp.asarray(self._tok),
-                                      jnp.asarray(self._idx))
+        # the all-greedy batch takes the argmax-only hot path; any sampled
+        # active lane switches the whole step to the per-lane sampling
+        # executable (greedy lanes still argmax inside it, and every
+        # lane's key advances exactly once per step it is active)
+        if any(self._temp[lane] > 0.0 for lane in active):
+            nxt, keys, self._cache = self._step_sampled(
+                self.params, self._cache, jnp.asarray(self._tok),
+                jnp.asarray(self._idx), jnp.asarray(self._keys),
+                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp))
+            # copy back keys for ACTIVE lanes only: a lane that joined
+            # after `active` was snapshotted had this step's token
+            # discarded, so its key must not consume this step's split —
+            # a lane's key position is exactly its own token count
+            keys_np = np.asarray(keys)
+            for lane in active:
+                self._keys[lane] = keys_np[lane]
+        else:
+            nxt, self._cache = self._step(self.params, self._cache,
+                                          jnp.asarray(self._tok),
+                                          jnp.asarray(self._idx))
         nxt_np = np.asarray(nxt)        # the one (slots,) transfer per step
         prof = self.profile             # Update-Profile: live step telemetry
         if prof is not None:
@@ -362,6 +518,10 @@ class Replica:
                 self._idx[lane] += 1
                 if job.remaining == 0:
                     self._lanes[lane] = None
+                    # freed lanes must not keep forcing the sampled path
+                    self._temp[lane] = 0.0
+                    self._topk[lane] = 0
+                    self._topp[lane] = 1.0
                     finished.append(job)
         for job in finished:
             job.done.set()
@@ -398,36 +558,37 @@ def measure_step_curve(rep: Replica, steps_per_point: int = 6,
 
     Returns ``(occupancies, step_ms, prefill_chunk_ms)``.
     """
-    cache = model_lib.init_cache(rep.cfg, rep.slots, rep.capacity)
-    tok = jnp.zeros((rep.slots, 1), jnp.int32)
-    pos = min(16, rep.capacity - 1)
-    occs, step_ms = [], []
-    for n in range(1, rep.slots + 1):
-        idx = jnp.asarray(
-            np.where(np.arange(rep.slots) < n, pos, 0).astype(np.int32))
-        best = float("inf")
-        for i in range(warmup_steps + steps_per_point):
-            t0 = time.perf_counter()
-            nxt, cache = rep._step(rep.params, cache, tok, idx)
-            nxt.block_until_ready()
-            dt = (time.perf_counter() - t0) * 1e3
-            if i >= warmup_steps:
-                best = min(best, dt)
-        occs.append(float(n))
-        step_ms.append(best)
+    with rep._mesh_scope():
+        cache = model_lib.init_cache(rep.cfg, rep.slots, rep.capacity)
+        tok = jnp.zeros((rep.slots, 1), jnp.int32)
+        pos = min(16, rep.capacity - 1)
+        occs, step_ms = [], []
+        for n in range(1, rep.slots + 1):
+            idx = jnp.asarray(
+                np.where(np.arange(rep.slots) < n, pos, 0).astype(np.int32))
+            best = float("inf")
+            for i in range(warmup_steps + steps_per_point):
+                t0 = time.perf_counter()
+                nxt, cache = rep._step(rep.params, cache, tok, idx)
+                nxt.block_until_ready()
+                dt = (time.perf_counter() - t0) * 1e3
+                if i >= warmup_steps:
+                    best = min(best, dt)
+            occs.append(float(n))
+            step_ms.append(best)
 
-    chunk_ms = 0.0
-    if rep._chunkable and rep.prefill_chunk_tokens <= rep.capacity:
-        lane = model_lib.init_cache(rep.cfg, 1, rep.capacity)
-        buf = jnp.zeros((1, rep.prefill_chunk_tokens), jnp.int32)
-        best = float("inf")
-        for i in range(1 + steps_per_point):
-            t0 = time.perf_counter()
-            lg, lane = rep._prefill_chunk(rep.params, lane, buf, 0)
-            jax.block_until_ready(lg)
-            if i >= 1:
-                best = min(best, (time.perf_counter() - t0) * 1e3)
-        chunk_ms = best
+        chunk_ms = 0.0
+        if rep._chunkable and rep.prefill_chunk_tokens <= rep.capacity:
+            lane = model_lib.init_cache(rep.cfg, 1, rep.capacity)
+            buf = jnp.zeros((1, rep.prefill_chunk_tokens), jnp.int32)
+            best = float("inf")
+            for i in range(1 + steps_per_point):
+                t0 = time.perf_counter()
+                lg, lane = rep._prefill_chunk(rep.params, lane, buf, 0)
+                jax.block_until_ready(lg)
+                if i >= 1:
+                    best = min(best, (time.perf_counter() - t0) * 1e3)
+            chunk_ms = best
     return occs, step_ms, chunk_ms
 
 
@@ -490,7 +651,15 @@ class ServingFleet:
     ``MaintainProfileTable``; routing reads *that* staleness-tolerant
     table, not live replica state — level 1 (the source's own decision)
     and the coordinator's self-view stay exact, peers are table views, so
-    the router scales without fanning a state RPC per request."""
+    the router scales without fanning a state RPC per request.
+
+    ``submit(req)`` is the whole client API: the ``Request`` carries the
+    prompt, the SLO deadline, and the per-request sampling knobs
+    (temperature / top_k / top_p / seed), which ride through routing
+    untouched and bind to whichever replica lane the request lands on.
+    Replicas may be single-chip or sharded (``Replica(serving_mesh=...)``)
+    — the router only ever sees their lane-mode profiles and occupancy
+    telemetry, so both kinds mix in one fleet."""
 
     def __init__(self, policy: Policy, source: str, coordinator: str,
                  heartbeat_ms: float = 20.0):

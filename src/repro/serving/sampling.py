@@ -1,0 +1,82 @@
+"""Per-lane token sampling for the batched continuous-batching decoder.
+
+Every decode lane carries its own PRNG key and its own sampling knobs
+(temperature, top-k, top-p), so one jitted step samples all lanes at once
+while keeping lanes *numerically independent*: lane b's token stream is a
+pure function of (lane b's key, lane b's logits history) — lanes joining or
+leaving the batch cannot perturb it.  That independence is what makes
+sampled continuous batching testable the same way greedy is (fixed per-lane
+keys => reproducible per-lane streams, test-enforced).
+
+Key discipline (mirrored by the engine):
+
+  * a request's root key is ``jax.random.PRNGKey(seed)`` (seed defaults to
+    the request id);
+  * every token — the prefill's first token included — consumes one
+    ``jax.random.split``: ``key, sub = split(key)``, sample with ``sub``,
+    carry ``key``.  The split count equals the lane's OWN token count, so
+    the stream does not depend on other lanes' traffic.
+
+Greedy lanes (``temperature <= 0``) take the argmax inside the same batched
+step, so greedy and sampled requests mix freely in one batch and greedy
+outputs stay token-identical to the pure-greedy engine path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def make_lane_key(seed: int) -> np.ndarray:
+    """Root PRNG key for one request/lane as raw ``(2,)`` uint32 host data
+    (the engine keeps a ``(slots, 2)`` host mirror next to tok/idx)."""
+    return np.asarray(jax.random.PRNGKey(int(seed)), np.uint32)
+
+
+def _filter_logits(logits, top_k, top_p):
+    """Apply per-lane top-k and top-p (nucleus) filters to ``(B, V)``
+    logits.  ``top_k <= 0`` and ``top_p >= 1`` disable the respective
+    filter for that lane.  Value-threshold semantics: ties with the k-th
+    (or nucleus-cutoff) logit are kept, the standard vectorized caveat."""
+    v = logits.shape[-1]
+    sorted_lg = jnp.sort(logits, axis=-1)[..., ::-1]        # descending
+    # top-k: drop logits strictly below the lane's k-th largest value
+    kth_i = jnp.clip(top_k - 1, 0, v - 1)
+    kth = jnp.take_along_axis(sorted_lg, kth_i[:, None], axis=-1)
+    drop = (top_k > 0)[:, None] & (logits < kth)
+    # top-p: keep the smallest prefix of descending-prob tokens whose
+    # cumulative mass reaches p (always at least one token)
+    probs = jax.nn.softmax(sorted_lg, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    cut_i = jnp.clip(jnp.sum(csum < top_p[:, None], axis=-1, keepdims=True),
+                     0, v - 1)
+    cut = jnp.take_along_axis(sorted_lg, cut_i, axis=-1)
+    drop |= (top_p < 1.0)[:, None] & (logits < cut)
+    return jnp.where(drop, NEG_INF, logits)
+
+
+def sample_lane_tokens(keys, logits, temperature, top_k, top_p):
+    """One batched per-lane sampling step.
+
+    keys:        (B, 2) uint32 — per-lane PRNG keys
+    logits:      (B, V) — last-position logits
+    temperature: (B,) float — <= 0 means greedy (argmax) for that lane
+    top_k:       (B,) int   — 0 disables
+    top_p:       (B,) float — >= 1 disables
+
+    Returns ``(next_keys (B, 2) uint32, tokens (B,) int32)``.  Every
+    lane's key advances exactly one split per call (greedy lanes
+    included, so a lane's key position depends only on its token count).
+    """
+    logits = logits.astype(jnp.float32)
+    split = jax.vmap(jax.random.split)(keys.astype(jnp.uint32))  # (B, 2, 2)
+    carry, sub = split[:, 0], split[:, 1]
+    greedy = temperature <= 0.0
+    safe_t = jnp.where(greedy, 1.0, temperature)
+    filtered = _filter_logits(logits / safe_t[:, None], top_k, top_p)
+    sampled = jax.vmap(jax.random.categorical)(sub, filtered)
+    toks = jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled)
+    return carry, toks.astype(jnp.int32)

@@ -5,7 +5,9 @@ Layout: KV cache (B, S, Hkv, D) with batch over ``data`` and SEQUENCE over
 ``model`` (kv-head counts rarely divide tp=16; sequence always does).  Each
 model-rank:
 
-  1. writes the new token's K/V if the ring slot lands in its S-shard,
+  1. writes each lane's new K/V if that lane's ring slot lands in its
+     S-shard (``cache_index`` may be a per-lane ``(B,)`` vector — lanes of
+     a continuous batch sit at independent depths),
   2. computes a partial softmax (m, l, acc) over its local S chunk,
   3. joins via the log-sum-exp combine: two psums of (B, H) scalars and one
      of (B, H, D) — O(KB), vs the multi-GB cache all-gather GSPMD emits for
@@ -59,12 +61,21 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
     """Returns (out (B,1,H,D), k_cache', v_cache', pos').
 
     pos: (S,) — or per-lane (B, S) — int32 ring-slot absolute positions
-    (-1 = empty).  The new token is written at slot ``cache_index % S``.
-    (Per-lane ``cache_index`` vectors are a follow-on; the index is scalar.)
+    (-1 = empty).  ``cache_index`` is a scalar (all lanes at the same
+    depth) or a per-lane ``(B,)`` vector — the continuous-batching case,
+    where lane b writes its new token's K/V at slot ``cache_index[b] % S``
+    and masks (validity + sliding window) against its OWN absolute
+    position.  Per-lane indices require per-lane ``(B, S)`` pos.  Each
+    S-shard performs the ring write only for the lanes whose slot lands
+    in its local chunk, so lanes at wildly different depths still decode
+    in one shard_map step.
     """
     b, _, hq, d = q.shape
     s = k_cache.shape[1]
     pos_batched = pos.ndim == 2
+    idx_batched = jnp.ndim(cache_index) == 1
+    if idx_batched and not pos_batched:
+        raise ValueError("per-lane cache_index requires per-lane (B, S) pos")
     n_seq = mesh.shape[seq_axis]
     assert s % n_seq == 0, (s, n_seq)
     s_loc = s // n_seq
@@ -81,29 +92,45 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
     def body(q_l, k_l, v_l, nk_l, nv_l, pos_l, idx):
         rank = jax.lax.axis_index(seq_axis)
         start = rank * s_loc
-        slot = jax.lax.rem(idx, s)
+        slot = jax.lax.rem(idx, s)                  # () or (Bl,)
         off = slot - start
         in_range = jnp.logical_and(off >= 0, off < s_loc)
         off_c = jnp.clip(off, 0, s_loc - 1)
-        # conditional ring write (only the owning shard's write sticks)
-        k_new = jax.lax.dynamic_update_slice(k_l, nk_l.astype(k_l.dtype),
-                                             (0, off_c, 0, 0))
-        v_new = jax.lax.dynamic_update_slice(v_l, nv_l.astype(v_l.dtype),
-                                             (0, off_c, 0, 0))
-        k_l = jnp.where(in_range, k_new, k_l)
-        v_l = jnp.where(in_range, v_new, v_l)
-        if pos_batched:
-            pos_new = jax.lax.dynamic_update_slice(
-                pos_l, jnp.full((pos_l.shape[0], 1), idx, jnp.int32),
-                (0, off_c))
+        if idx_batched:
+            # per-lane conditional ring write: lane b's slot may land in a
+            # different S-shard than lane c's; each shard scatters the new
+            # K/V for ALL lanes at their clipped offsets, then keeps the
+            # write only for lanes it owns
+            lanes = jnp.arange(k_l.shape[0])
+            k_upd = k_l.at[lanes, off_c].set(nk_l[:, 0].astype(k_l.dtype))
+            v_upd = v_l.at[lanes, off_c].set(nv_l[:, 0].astype(v_l.dtype))
+            k_l = jnp.where(in_range[:, None, None, None], k_upd, k_l)
+            v_l = jnp.where(in_range[:, None, None, None], v_upd, v_l)
+            pos_upd = pos_l.at[lanes, off_c].set(idx)
+            pos_l = jnp.where(in_range[:, None], pos_upd, pos_l)
         else:
-            pos_new = jax.lax.dynamic_update_slice(
-                pos_l, idx[None].astype(jnp.int32), (off_c,))
-        pos_l = jnp.where(in_range, pos_new, pos_l)
+            # aligned lanes: one dynamic slice write, owning shard's sticks
+            k_new = jax.lax.dynamic_update_slice(k_l, nk_l.astype(k_l.dtype),
+                                                 (0, off_c, 0, 0))
+            v_new = jax.lax.dynamic_update_slice(v_l, nv_l.astype(v_l.dtype),
+                                                 (0, off_c, 0, 0))
+            k_l = jnp.where(in_range, k_new, k_l)
+            v_l = jnp.where(in_range, v_new, v_l)
+            if pos_batched:
+                pos_new = jax.lax.dynamic_update_slice(
+                    pos_l, jnp.full((pos_l.shape[0], 1), idx, jnp.int32),
+                    (0, off_c))
+            else:
+                pos_new = jax.lax.dynamic_update_slice(
+                    pos_l, idx[None].astype(jnp.int32), (off_c,))
+            pos_l = jnp.where(in_range, pos_new, pos_l)
 
         valid = pos_l >= 0
         if window > 0:
-            valid &= pos_l > idx - window
+            # per-lane sliding window: each lane's window trails its own
+            # absolute position
+            hi = idx[:, None] if idx_batched else idx
+            valid &= pos_l > hi - window
         m, l, acc = _local_attend(q_l, k_l, v_l, valid, scale, softcap)
 
         # log-sum-exp combine across S shards: O(B*H) + O(B*H*D) psums
@@ -115,7 +142,8 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
         out = out.reshape(q_l.shape[0], 1, hq, d).astype(q_l.dtype)
         return out, k_l, v_l, pos_l
 
-    pos_spec = P(None, seq_axis) if pos_batched else P(seq_axis)
+    pos_spec = P(bspec, seq_axis) if pos_batched else P(seq_axis)
+    idx_spec = P(bspec) if idx_batched else P()
     fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None, None),        # q (replicated on seq)
@@ -124,7 +152,7 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
                   P(bspec, None, None, None),        # new k
                   P(bspec, None, None, None),        # new v
                   pos_spec,                          # pos
-                  P()),                              # cache_index
+                  idx_spec),                         # cache_index
         out_specs=(P(bspec, None, None, None),
                    P(bspec, seq_axis, None, None),
                    P(bspec, seq_axis, None, None),

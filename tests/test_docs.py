@@ -1,0 +1,42 @@
+"""Docs cannot rot: every ```python fence in README.md + docs/*.md must
+execute, and every relative markdown link must resolve.  The same checks
+run as the CI docs job (``tools/check_docs.py``)."""
+import os
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_docs  # noqa: E402
+
+
+def _all_fences():
+    return [(os.path.relpath(p, REPO), line, src)
+            for p in check_docs.doc_files()
+            for line, src in check_docs.python_fences(p)]
+
+
+def test_docs_exist_and_have_fences():
+    files = [os.path.basename(p) for p in check_docs.doc_files()]
+    assert "README.md" in files
+    assert "ARCHITECTURE.md" in files
+    assert "SERVING.md" in files
+    assert _all_fences(), "docs lost all executable examples"
+
+
+def test_markdown_links_resolve():
+    errors = []
+    for path in check_docs.doc_files():
+        errors.extend(check_docs.check_links(path))
+    assert not errors, errors
+
+
+@pytest.mark.parametrize(
+    "relpath,line,src",
+    [pytest.param(r, l, s, id=f"{r.replace(os.sep, '/')}:{l}")
+     for r, l, s in _all_fences()])
+def test_python_fences_execute(relpath, line, src):
+    ok, err = check_docs.run_fence(os.path.join(REPO, relpath), line, src)
+    assert ok, err

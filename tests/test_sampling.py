@@ -1,0 +1,102 @@
+"""Per-lane sampling unit tests: deterministic filter properties,
+per-lane key discipline, greedy/sampled mixing — the numerics under the
+engine's sampled decode path (engine-level reproducibility and
+lane-independence live in test_serving.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampling import (NEG_INF, _filter_logits, make_lane_key,
+                                    sample_lane_tokens)
+
+
+def _keys(n, seed=0):
+    return jnp.asarray(
+        np.stack([make_lane_key(seed + i) for i in range(n)]), jnp.uint32)
+
+
+def _arr(vals, dtype):
+    return jnp.asarray(np.asarray(vals, dtype))
+
+
+def test_greedy_lanes_are_argmax_regardless_of_key():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (3, 17))
+    for seed in (0, 123):
+        _, toks = sample_lane_tokens(
+            _keys(3, seed), logits, _arr([0.0, -1.0, 0.0], np.float32),
+            _arr([0, 0, 0], np.int32), _arr([1.0, 1.0, 1.0], np.float32))
+        assert toks.tolist() == jnp.argmax(logits, -1).tolist()
+
+
+def test_top_k_one_is_argmax_even_at_high_temperature():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 33))
+    _, toks = sample_lane_tokens(
+        _keys(4), logits, _arr([5.0] * 4, np.float32),
+        _arr([1] * 4, np.int32), _arr([1.0] * 4, np.float32))
+    assert toks.tolist() == jnp.argmax(logits, -1).tolist()
+
+
+def test_top_k_restricts_support():
+    """Over many independent keys, every sampled token stays inside the
+    lane's top-k set (value-threshold semantics, distinct logits)."""
+    logits = jnp.asarray(np.random.default_rng(2).permutation(64.0 *
+                         np.arange(1, 33))[None, :]).astype(jnp.float32)
+    k = 4
+    topset = set(np.argsort(-np.asarray(logits[0]))[:k].tolist())
+    for seed in range(20):
+        _, toks = sample_lane_tokens(
+            _keys(1, seed), logits, _arr([2.0], np.float32),
+            _arr([k], np.int32), _arr([1.0], np.float32))
+        assert int(toks[0]) in topset
+
+
+def test_top_p_peaked_distribution_collapses_to_top_token():
+    """With one token holding > p of the mass, nucleus sampling keeps
+    only that token."""
+    logits = jnp.zeros((1, 16)).at[0, 5].set(20.0)
+    for seed in range(10):
+        _, toks = sample_lane_tokens(
+            _keys(1, seed), logits, _arr([1.0], np.float32),
+            _arr([0], np.int32), _arr([0.5], np.float32))
+        assert int(toks[0]) == 5
+
+
+def test_filter_disabled_flags_leave_logits_untouched():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (2, 9))
+    out = _filter_logits(logits, _arr([0, 0], np.int32),
+                         _arr([1.0, 1.0], np.float32))
+    assert jnp.array_equal(out, logits)
+
+
+def test_filters_are_per_lane():
+    """Lane 0 top-k=1 (collapses), lane 1 unfiltered — one batched call."""
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0], [0.0, 1.0, 2.0, 3.0]])
+    out = _filter_logits(logits, _arr([1, 0], np.int32),
+                         _arr([1.0, 1.0], np.float32))
+    assert float(out[0, 0]) <= NEG_INF * 0.99 and float(out[0, 3]) == 3.0
+    assert jnp.array_equal(out[1], logits[1])
+
+
+def test_keys_advance_one_split_per_call_and_differ_per_lane():
+    keys = _keys(3)
+    logits = jax.random.normal(jax.random.PRNGKey(4), (3, 11))
+    temp = _arr([1.0, 1.0, 0.0], np.float32)
+    k0 = _arr([0, 0, 0], np.int32)
+    p1 = _arr([1.0, 1.0, 1.0], np.float32)
+    nxt, t1 = sample_lane_tokens(keys, logits, temp, k0, p1)
+    assert not np.array_equal(np.asarray(nxt), np.asarray(keys))
+    # greedy lanes advance too: a lane's key position depends only on its
+    # own token count, never on its sampling mode or neighbours
+    assert not np.array_equal(np.asarray(nxt[2]), np.asarray(keys[2]))
+    # same keys, same logits -> same tokens (pure function)
+    _, t2 = sample_lane_tokens(keys, logits, temp, k0, p1)
+    assert t1.tolist() == t2.tolist()
+    # lanes with identical logits but different keys may diverge; with
+    # distinct root seeds the split streams are distinct
+    assert not np.array_equal(np.asarray(_keys(3, 0)), np.asarray(_keys(3, 9)))
+
+
+def test_make_lane_key_matches_jax_prngkey():
+    assert np.array_equal(make_lane_key(7),
+                          np.asarray(jax.random.PRNGKey(7), np.uint32))

@@ -1,0 +1,98 @@
+"""Docs smoke checker: the documentation cannot rot silently.
+
+Two checks over ``README.md`` + ``docs/*.md``:
+
+  1. every ```` ```python ```` code fence is executed (one fresh namespace
+     per fence, ``src/`` on the path) — a doc example that imports a
+     renamed symbol or calls a changed API fails CI;
+  2. every relative markdown link ``[text](path)`` must resolve to an
+     existing file (anchors and absolute URLs are skipped).
+
+Fences in other languages (```bash, ```text) are illustrative and not
+executed.  Run directly or via ``tests/test_docs.py``:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+# [text](target) — skip images' extra ! prefix handling (same syntax)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files() -> List[str]:
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        out.extend(os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                   if f.endswith(".md"))
+    return [f for f in out if os.path.exists(f)]
+
+
+def python_fences(path: str) -> List[Tuple[int, str]]:
+    """(line_number, source) for every ```python fence in ``path``."""
+    text = open(path).read()
+    out = []
+    for m in _FENCE.finditer(text):
+        line = text[:m.start()].count("\n") + 1
+        out.append((line, m.group(1)))
+    return out
+
+
+def check_links(path: str) -> List[str]:
+    """Relative links that do not resolve, as error strings."""
+    errors = []
+    base = os.path.dirname(path)
+    for m in _LINK.finditer(open(path).read()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            errors.append(f"{os.path.relpath(path, REPO)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def run_fence(path: str, line: int, src: str) -> Tuple[bool, str]:
+    """Execute one fence in a fresh namespace; (ok, error message)."""
+    name = f"{os.path.relpath(path, REPO)}:{line}"
+    try:
+        code = compile(src, name, "exec")
+        exec(code, {"__name__": f"docfence_{line}"})
+        return True, ""
+    except Exception as e:  # noqa: BLE001 — any failure is a doc rot signal
+        return False, f"{name}: {type(e).__name__}: {e}"
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    failures = []
+    n_fences = 0
+    for path in doc_files():
+        failures.extend(check_links(path))
+        for line, src in python_fences(path):
+            n_fences += 1
+            ok, err = run_fence(path, line, src)
+            if ok:
+                print(f"ok   {os.path.relpath(path, REPO)}:{line}")
+            else:
+                print(f"FAIL {err}")
+                failures.append(err)
+    print(f"{n_fences} python fences, {len(failures)} failure(s)")
+    for f in failures:
+        print(" -", f, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
