@@ -114,6 +114,63 @@ def bench_serving_throughput():
                   f"batched4={batched_tps[4]:.0f}tok/s seq={seq_tps:.0f}tok/s")
 
 
+def bench_serving_recurrent_throughput():
+    """Tokens/sec of the continuous-batching engine on a RECURRENT stack
+    (mamba2-tiny, pure SSD — no attention layers at all): the chunked
+    prefill that used to be attention-only now threads SSD state
+    chunk-to-chunk, so the recurrent half of the config zoo runs the same
+    multi-lane decode loop.  Tracks that the new workload's throughput
+    scales with occupancy like the attention engine's does."""
+    import threading
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.engine import Replica, Request
+
+    cfg = get_smoke_config("mamba2-780m").replace(param_dtype=jnp.float32,
+                                                  dtype=jnp.float32)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    prompt_len, new_tokens = 16, 48
+    rng = np.random.default_rng(0)
+
+    def reqs(n):
+        return [Request(i, rng.integers(2, cfg.vocab_size,
+                                        size=(prompt_len,)).astype(np.int32),
+                        new_tokens, 1e9) for i in range(n)]
+
+    rep = Replica("bench-ssm", cfg, params, slots=4, capacity=128,
+                  prefill_chunk_tokens=8)
+    assert rep.prefill_caps["supported"], rep.prefill_caps
+    rep.generate(reqs(1)[0])            # warm out of the timed region
+
+    rows = []
+    tps = {}
+    for conc in (1, 4):
+        rs = reqs(conc)
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=rep.generate, args=(r,))
+                   for r in rs]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        tps[conc] = conc * new_tokens / dt
+        rows.append({"conc": conc, "batched_tok_s": round(tps[conc], 1)})
+    rep.stop()
+
+    SERVING_METRICS["recurrent"] = {
+        "arch": "mamba2-780m (smoke)",
+        "chunked_prefill": True,
+        "tokens_per_sec": {f"conc{c}": round(v, 1) for c, v in tps.items()},
+    }
+    return rows, (f"ssm_conc4={tps[4]:.0f}tok/s conc1={tps[1]:.0f}tok/s "
+                  f"chunked_prefill=on")
+
+
 def bench_serving_routing():
     """DDS routing over a measured lane-mode profile: submit a burst of
     deadline-carrying requests through ServingFleet and record the
@@ -292,6 +349,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     serving = [("bench_serving_throughput", bench_serving_throughput),
+               ("bench_serving_recurrent_throughput",
+                bench_serving_recurrent_throughput),
                ("bench_serving_routing", bench_serving_routing),
                ("bench_serving_mesh_step_curve", bench_serving_mesh_step_curve)]
     if args.serving_smoke:

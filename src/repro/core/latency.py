@@ -8,7 +8,6 @@ policy routes through this single predictor.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -60,9 +59,12 @@ def predict_queue_ms(profile: DeviceProfile, task: Task,
 
     Lane-occupancy mode: a queued request waits for a lane to retire, i.e.
     one task's worth of decode steps at full occupancy, plus the chunked
-    prefill interleave each queued prompt imposes on the loop — a prompt
-    of L tokens interleaves ceil(L / chunk_tokens) chunks, not one (the
-    incoming task's size stands in for the unknown queued-prompt sizes)."""
+    prefill interleave each queued prompt imposes on the loop — charged
+    at the profile's measured per-token chunk rate
+    (``AppProfile.interleave_ms``), the same rate the engine's SLO
+    budget spends against, so predictor and budget stay one model (the
+    incoming task's size stands in for the unknown queued-prompt
+    sizes)."""
     if state.queued <= 0:
         return 0.0
     app = profile.app(task.app_id)
@@ -71,11 +73,8 @@ def predict_queue_ms(profile: DeviceProfile, task: Task,
         per_task = app.tokens_per_task * app.step_curve(float(profile.slots))
         if state.cpu_load > 0.0 and app.load_curve is not None:
             per_task *= app.load_curve(state.cpu_load) / app.load_curve(0.0)
-        chunks = 1.0
-        if app.prefill_chunk_tokens > 0:
-            chunks = math.ceil(max(task.size_kb, 1.0)
-                               / app.prefill_chunk_tokens)
-        return waves * per_task + state.queued * chunks * app.prefill_chunk_ms
+        return (waves * per_task
+                + state.queued * app.interleave_ms(max(task.size_kb, 1.0)))
     per_task = app.process_time(task.size_kb, min(profile.slots, max(
         state.running, 1)), state.cpu_load)
     return waves * per_task

@@ -194,14 +194,45 @@ class AppProfile:
         if self.step_curve is not None:
             self.step_curve.observe(float(max(occupancy, 1)), step_ms)
 
-    def observe_prefill_chunk(self, ms: float, ewma: float = 0.25) -> None:
-        """Lane-mode UP loop: EWMA the chunked-prefill interleave cost."""
+    def observe_prefill_chunk(self, ms: float, ewma: float = 0.25,
+                              tokens: Optional[int] = None) -> None:
+        """Lane-mode UP loop: EWMA the chunked-prefill interleave cost.
+
+        ``tokens`` is the width of the chunk that took ``ms``; under the
+        SLO budget chunks vary in width, so the sample is normalized to
+        the profile's reference width (``prefill_chunk_tokens``) before
+        folding — ``prefill_chunk_ms`` stays "ms per reference chunk"
+        and the per-token rate stays comparable across widths."""
+        if tokens and self.prefill_chunk_tokens > 0:
+            ms = ms * (self.prefill_chunk_tokens / float(tokens))
         with self._pc_lock:
             if self.prefill_chunk_ms > 0.0:
                 self.prefill_chunk_ms = ((1 - ewma) * self.prefill_chunk_ms
                                          + ewma * ms)
             else:
                 self.prefill_chunk_ms = ms
+
+    def prefill_ms_per_token(self) -> float:
+        """Measured chunked-prefill cost per prompt token (0.0 when the
+        replica has no chunk measurement, e.g. whole-prompt fallback).
+        This is the rate the serving engine's SLO budget divides into its
+        per-step slack, and the rate ``interleave_ms`` charges with."""
+        if self.prefill_chunk_ms <= 0.0 or self.prefill_chunk_tokens <= 0.0:
+            return 0.0
+        return self.prefill_chunk_ms / self.prefill_chunk_tokens
+
+    def interleave_ms(self, prompt_tokens: float) -> float:
+        """Chunked-prefill interleave charge for one L-token prompt,
+        derived from the same measured per-token rate the SLO budget
+        uses: L x (chunk_ms / chunk_tokens).  Chunks are exact (never
+        padded), so the charge is linear in L — no ceil-to-chunk
+        rounding.  Whole-prompt-fallback profiles
+        (``prefill_chunk_tokens == 0``) charge one monolithic stall."""
+        if self.prefill_chunk_ms <= 0.0:
+            return 0.0
+        if self.prefill_chunk_tokens <= 0.0:
+            return self.prefill_chunk_ms
+        return max(prompt_tokens, 1.0) * self.prefill_ms_per_token()
 
     def copy(self) -> "AppProfile":
         return AppProfile(

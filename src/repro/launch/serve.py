@@ -8,7 +8,14 @@ pre-evaluation -> two-level DDS routing -> SLO accounting.
 Per-request sampling rides on the request: ``--temperature/--top-k/--top-p``
 set the knobs for every generated request (0 temperature = greedy), and
 ``--sample-seed`` fixes the PRNG root so a rerun reproduces the exact token
-streams (each request i uses ``sample_seed + i``).
+streams (each request i uses ``sample_seed + i``).  ``--eos-id`` attaches a
+stop token to every request (lane freed the moment it is emitted).
+
+Chunked prefill is universal (recurrent + sliding-window stacks included —
+try ``--arch mamba2-780m`` or ``--arch recurrentgemma-9b``):
+``--prefill-chunk-tokens`` sets the per-step prefill budget ceiling and
+``--step-slo-ms`` makes the budget adaptive to the live decode-step cadence
+(see docs/PREFILL.md).
 """
 from __future__ import annotations
 
@@ -27,17 +34,23 @@ from repro.serving.engine import Replica, Request, ServingFleet
 
 
 def build_fleet(cfg, policy_name: str, replicas: int = 2,
-                slots: int = 2, capacity: int = 128) -> ServingFleet:
+                slots: int = 2, capacity: int = 128,
+                prefill_chunk_tokens: int = 32,
+                step_slo_ms: float = 0.0) -> ServingFleet:
     key = jax.random.PRNGKey(0)
     params = model_lib.init_model(key, cfg)
     fleet = ServingFleet(make_policy(policy_name), source="replica0",
                          coordinator="replica1" if replicas > 1 else "replica0")
     for i in range(replicas):
         rep = Replica(f"replica{i}", cfg, params, slots=slots,
-                      capacity=capacity)
+                      capacity=capacity,
+                      prefill_chunk_tokens=prefill_chunk_tokens,
+                      step_slo_ms=step_slo_ms)
         fleet.add_replica(rep)
         print(f"replica{i}: warmup (compile) {rep.warmup_s:.2f}s — "
-              f"cold-start paid up front")
+              f"cold-start paid up front; chunked prefill "
+              f"{'on' if rep.prefill_caps['supported'] else 'off'} "
+              f"(budget ceiling {rep.prefill_chunk_tokens} tokens)")
     return fleet
 
 
@@ -61,10 +74,22 @@ def main():
                     help="per-request nucleus (top-p) filter (1 = disabled)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="PRNG root; request i samples with seed+i")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=32,
+                    help="chunked-prefill budget CEILING per interleave "
+                         "slot (clamped to the stack's capability report)")
+    ap.add_argument("--step-slo-ms", type=float, default=0.0,
+                    help="per-decode-step latency SLO: >0 shrinks the "
+                         "prefill budget so chunk cost fits the slack over "
+                         "the live step-time EWMA (0 = fixed ceiling)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop decoding when this token id is emitted "
+                         "(trimmed from the output; -1 = disabled)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    fleet = build_fleet(cfg, args.policy, replicas=args.replicas)
+    fleet = build_fleet(cfg, args.policy, replicas=args.replicas,
+                        prefill_chunk_tokens=args.prefill_chunk_tokens,
+                        step_slo_ms=args.step_slo_ms)
 
     rng = np.random.default_rng(0)
     results: List = []
@@ -75,7 +100,8 @@ def main():
                                   size=(args.prompt_len,)).astype(np.int32)
             req = Request(i, prompt, args.new_tokens, args.deadline_ms,
                           temperature=args.temperature, top_k=args.top_k,
-                          top_p=args.top_p, seed=args.sample_seed + i)
+                          top_p=args.top_p, seed=args.sample_seed + i,
+                          eos_id=args.eos_id if args.eos_id >= 0 else None)
             futs.append(ex.submit(fleet.submit, req))
             time.sleep(args.interval_ms / 1e3)
         results = [f.result() for f in futs]

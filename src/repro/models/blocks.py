@@ -224,38 +224,68 @@ def apply_block_prefill_chunk(p, x, cache, cfg: ModelConfig, kind: str,
     """Extend an existing decode cache with a prompt chunk.
 
     x: (B, C, D) — the chunk's embeddings at absolute positions
-    [start, start+C).  The chunk's KV lands in the cache's ring slots and
-    queries attend causally over everything written so far, so a long
-    prompt can be prefilled in bounded pieces interleaved between decode
-    steps of OTHER lanes (continuous batching's anti-stall).  Attention-only
-    blocks: recurrent mixers (SSD/RG-LRU) carry chunk-to-chunk state that
-    the block cache API does not thread yet — callers gate on
-    ``model.supports_chunked_prefill``.
+    [start, start+C).  Every layer kind threads its cache chunk-to-chunk:
+
+    * **attention** — queries attend over ``[ring cache || this chunk]``
+      and the chunk's K/V is scattered into the ring *afterwards*.
+      Reading before writing makes the path ring-wrap-safe: a chunk that
+      spans the ring boundary would otherwise overwrite keys (absolute
+      position ``pos + n``) that its own earlier queries still need
+      inside their sliding window.
+    * **SSD / RG-LRU** — the mixer consumes the incoming recurrent state
+      (conv tail + hidden state) and returns the post-chunk state
+      (``ssm_prefill_chunk`` / ``rglru_prefill_chunk``), so successive
+      chunks compose to exactly the full-sequence scan.
+
+    Cross-attention blocks are the one unsupported kind (their KV cache
+    is the encoder's, filled by whole-prompt prefill with ``enc``) —
+    ``model.chunked_prefill_caps`` reports capability per kind so callers
+    can fall back per stack instead of gating on an all-or-nothing flag.
     """
-    if kind != ATTN:
-        raise NotImplementedError(
-            f"chunked prefill supports attention blocks only, got {kind!r}")
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
-    b, c, _ = x.shape
-    n = cache["k"].shape[1]
-    start = jnp.asarray(start, jnp.int32)
-    positions = start + jnp.arange(c, dtype=jnp.int32)         # (C,)
-    q, k, v = attn_lib._project_qkv(p["attn"], h, cfg, positions, attn_kind)
-    slots = jax.lax.rem(positions, n)
-    kc = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
-    vc = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
-    pos = cache["pos"].at[:, slots].set(positions)
-    window = attn_lib._window_for(cfg, attn_kind)
-    # (B, C, n): valid slot, causal vs the query's absolute position, window
-    m = (pos[:, None, :] >= 0) & (pos[:, None, :] <= positions[None, :, None])
-    if window > 0:
-        m &= pos[:, None, :] > positions[None, :, None] - window
-    out = ref.mha_cache_masked(
-        q, kc, vc, mask=m,
-        scale=cfg.attn_scale or cfg.resolved_head_dim ** -0.5,
-        softcap=cfg.logit_softcap)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(x.dtype))
-    x = x + y
-    new_cache = {"k": kc, "v": vc, "pos": pos}
+    new_cache = cache
+    if kind == ATTN:
+        b, c, _ = x.shape
+        n = cache["k"].shape[1]
+        start = jnp.asarray(start, jnp.int32)
+        positions = start + jnp.arange(c, dtype=jnp.int32)     # (C,)
+        q, k, v = attn_lib._project_qkv(p["attn"], h, cfg, positions,
+                                        attn_kind)
+        window = attn_lib._window_for(cfg, attn_kind)
+        # attend over [old ring || chunk]: (B, C, n + C) mask — valid slot,
+        # causal vs the query's absolute position, sliding window
+        pos_cat = jnp.concatenate(
+            [cache["pos"], jnp.broadcast_to(positions, (b, c))], axis=1)
+        k_cat = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], 1)
+        v_cat = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], 1)
+        m = ((pos_cat[:, None, :] >= 0)
+             & (pos_cat[:, None, :] <= positions[None, :, None]))
+        if window > 0:
+            m &= pos_cat[:, None, :] > positions[None, :, None] - window
+        out = ref.mha_cache_masked(
+            q, k_cat, v_cat, mask=m,
+            scale=cfg.attn_scale or cfg.resolved_head_dim ** -0.5,
+            softcap=cfg.logit_softcap)
+        # now scatter the chunk's last min(C, n) keys into the ring (the
+        # older ones are already beyond the ring and can never be read)
+        take = min(c, n)
+        src = positions[c - take:]
+        slots = jax.lax.rem(src, n)
+        kc = cache["k"].at[:, slots].set(k[:, c - take:].astype(cache["k"].dtype))
+        vc = cache["v"].at[:, slots].set(v[:, c - take:].astype(cache["v"].dtype))
+        pos = cache["pos"].at[:, slots].set(src)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(x.dtype))
+        x = x + y
+        new_cache = {"k": kc, "v": vc, "pos": pos}
+    elif kind == SSM:
+        y, new_cache = ssm_lib.ssm_prefill_chunk(p["ssm"], h, cache, cfg)
+        x = x + y
+    elif kind == RGLRU:
+        y, new_cache = rglru_lib.rglru_prefill_chunk(p["rec"], h, cache, cfg)
+        x = x + y
+    else:
+        raise NotImplementedError(
+            f"chunked prefill is not supported for {kind!r} blocks "
+            "(see model.chunked_prefill_caps)")
     x, aux = _channel_mix(p, x, cfg, kind, num_groups)
     return x, new_cache, aux

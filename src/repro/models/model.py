@@ -212,15 +212,57 @@ def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
 
 
 # ------------------------------------------------------------ chunked prefill
-def supports_chunked_prefill(cfg: ModelConfig) -> bool:
-    """Chunked prefill extends a live decode cache one prompt piece at a
-    time.  Supported for pure global-attention stacks: recurrent mixers
-    (SSD/RG-LRU) would need chunk-to-chunk state threading, and sliding
-    windows would need ring-wrap-safe chunk scatter (both ROADMAP items)."""
+def chunked_prefill_caps(cfg: ModelConfig, capacity: int) -> Dict[str, Any]:
+    """Per-kind chunked-prefill capability report (replaces the old
+    all-or-nothing ``supports_chunked_prefill`` gate).
+
+    Chunked prefill extends a live decode cache one exact prompt piece at
+    a time: attention layers read-then-scatter their ring cache
+    (ring-wrap-safe), recurrent mixers (SSD/RG-LRU) thread their state
+    chunk-to-chunk.  Cross-attention is the one unsupported kind (its KV
+    cache belongs to the encoder and is filled with ``enc`` by
+    whole-prompt prefill).
+
+    Returns a dict:
+
+    * ``kinds`` — ``{label: bool}`` per distinct layer kind in the stack
+      (labels ``attn:global`` / ``attn:local`` / ``ssm`` / ``rglru`` /
+      ``cross``);
+    * ``supported`` — every layer kind can chunk-prefill;
+    * ``max_chunk_tokens`` — the widest exact chunk: the smallest
+      attention ring in the stack (a wider chunk would overwrite its own
+      keys in one scatter); ``capacity`` for attention-free stacks;
+    * ``max_prompt_tokens`` — longest prompt that chunk-prefills exactly,
+      or ``None`` for unbounded: a global-attention layer (or a sliding
+      window the ring cannot hold, ``capacity < window``) bounds it to
+      its ring length, recurrent and full-window local layers do not.
+    """
     from repro.common.config import GLOBAL
-    if any(k != ATTN for k in cfg.layer_kinds()):
-        return False
-    return all(a == GLOBAL for a in cfg.attn_kinds()) or not cfg.sliding_window
+    from repro.models import attention as attn_lib
+    from repro.models import blocks as blk
+
+    kinds: Dict[str, bool] = {}
+    max_chunk = capacity
+    max_prompt: Optional[int] = None
+    for kind, akind in zip(cfg.layer_kinds(), cfg.attn_kinds()):
+        if kind == ATTN:
+            label = f"attn:{akind}"
+            kinds[label] = True
+            n = blk._attn_cache_len(cfg, akind, capacity)
+            max_chunk = min(max_chunk, n)
+            window = attn_lib._window_for(cfg, akind)
+            if window == 0 or n < window:
+                max_prompt = n if max_prompt is None else min(max_prompt, n)
+        elif kind == CROSS:
+            kinds["cross"] = False
+        else:
+            kinds[kind] = True
+    return {
+        "kinds": kinds,
+        "supported": all(kinds.values()) if kinds else False,
+        "max_chunk_tokens": max(int(max_chunk), 1),
+        "max_prompt_tokens": max_prompt,
+    }
 
 
 def prefill_chunk(params, cache, tokens, start, cfg: ModelConfig,
@@ -229,12 +271,14 @@ def prefill_chunk(params, cache, tokens, start, cfg: ModelConfig,
     """Extend ``cache`` with prompt chunk ``tokens`` ((B, C) int32) whose
     first token sits at absolute position ``start``.  Returns last-position
     logits (B, 1, V) — or all C positions' logits with
-    ``return_all_logits`` (callers padding the final chunk to a fixed
-    compile shape index the last REAL position) — and the extended cache.
-    Start from a fresh ``init_cache(cfg, B, capacity)`` with ``start=0``;
-    successive calls advance ``start`` by the previous chunk length.  This
-    is the serving engine's anti-stall: a long prompt prefills in bounded
-    pieces interleaved between other lanes' decode steps."""
+    ``return_all_logits`` — and the extended cache.  Works for every
+    supported layer kind (``chunked_prefill_caps``): attention layers
+    read-then-scatter their ring cache, SSD/RG-LRU mixers thread their
+    recurrent state chunk-to-chunk.  Start from a fresh
+    ``init_cache(cfg, B, capacity)`` with ``start=0``; successive calls
+    advance ``start`` by the previous chunk length.  This is the serving
+    engine's anti-stall: a long prompt prefills in bounded pieces
+    interleaved between other lanes' decode steps."""
     if tokens.ndim == 2:
         x = lyr.embed(params["embed"], tokens, cfg)
     else:
@@ -281,24 +325,6 @@ def prefill_chunk(params, cache, tokens, start, cfg: ModelConfig,
     sel = x if return_all_logits else x[:, -1:]
     logits = lyr.logits_head(params["embed"], sel, cfg, params.get("head"))
     return logits, {"periods": new_periods, "tail": tuple(new_tail)}
-
-
-def trim_cache(cache, length) -> Dict[str, Any]:
-    """Invalidate cache entries at positions >= ``length``: per-lane ring
-    ``pos`` slots written by a PADDED prefill chunk read as empty again
-    (their stale K/V is thereby masked, and decode overwrites those slots
-    as real tokens arrive)."""
-    from jax.tree_util import tree_map_with_path
-
-    length = jnp.asarray(length, jnp.int32)
-
-    def f(path, leaf):
-        key = getattr(path[-1], "key", None) if path else None
-        if key == "pos":
-            return jnp.where(leaf < length, leaf, -1)
-        return leaf
-
-    return tree_map_with_path(f, cache)
 
 
 # --------------------------------------------------------------------- prefill

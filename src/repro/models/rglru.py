@@ -64,6 +64,36 @@ def rglru_block(params, x, cfg: ModelConfig, return_state: bool = False):
     return out
 
 
+def rglru_prefill_chunk(params, x, cache, cfg: ModelConfig):
+    """Chunk-to-chunk Griffin prefill: run prompt chunk ``x`` ((B, C,
+    d_model)) starting from the incoming recurrent ``cache`` (``{"conv",
+    "h"}`` — the pytree ``rglru_decode`` consumes) and return ``(y,
+    new_cache)`` with the post-chunk state.
+
+    The conv window is seeded with the cached raw-input tail; the linear
+    recurrence is the zero-state chunk scan plus the incoming hidden
+    state's decayed contribution ``exp(cumsum log_a) h0`` (the gates
+    depend only on the conv output, so they are unchanged by h0) — chunks
+    compose to exactly the full-sequence recurrence.
+    """
+    dtype = x.dtype
+    f32 = jnp.float32
+    w = cfg.conv_width - 1
+    u = x @ params["w_x"].astype(dtype)
+    gate = jax.nn.gelu(x @ params["w_y"].astype(dtype))
+    conv_in = jnp.concatenate([cache["conv"].astype(dtype), u], axis=1)
+    new_conv = conv_in[:, conv_in.shape[1] - w:]
+    u_conv = ops.causal_conv1d(conv_in, params["conv_w"],
+                               params["conv_b"])[:, w:]
+    log_a, gate_i = _gates(params, u_conv, cfg)
+    h_local = ops.rglru(u_conv, log_a.astype(dtype), gate_i.astype(dtype))
+    carry = jnp.exp(jnp.cumsum(log_a, axis=1)) * cache["h"][:, None, :]
+    h = h_local.astype(f32) + carry
+    out = (h.astype(dtype) * gate) @ params["w_out"].astype(dtype)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "h": h[:, -1]}
+
+
 def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=None):
     dtype = dtype or cfg.dtype
     w = cfg.rglru_width

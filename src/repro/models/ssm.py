@@ -112,6 +112,62 @@ def _final_ssd_state(xs, dt, a_log, b_mat):
     return jnp.einsum("bsn,bsh,bshp->bhnp", b_mat.astype(f32), decay_to_end, xb)
 
 
+def ssm_prefill_chunk(params, x, cache, cfg: ModelConfig):
+    """Chunk-to-chunk SSD prefill: run prompt chunk ``x`` ((B, C, d_model))
+    through the mixer starting from the incoming recurrent ``cache``
+    (``{"conv", "state"}`` — the same pytree ``ssm_decode`` consumes) and
+    return ``(y, new_cache)`` with the post-chunk state.
+
+    Exactness: the chunk's conv window is seeded with the cached tail of
+    raw conv inputs, the SSD output is the zero-state chunk scan plus the
+    incoming state's decayed contribution ``C_t exp(cum_t) h0``, and the
+    outgoing state is ``exp(total) h0`` plus the chunk's own final state —
+    so successive chunks compose to exactly the full-sequence recurrence
+    (same math, different chunk boundaries than ``ssm_mixer``'s internal
+    scan).
+    """
+    b, c, _ = x.shape
+    d_inner, n_heads, n_state, conv_dim, _ = _dims(cfg)
+    dtype = x.dtype
+    f32 = jnp.float32
+    w = cfg.conv_width - 1
+
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xbc_raw, dt_raw = _split_proj(zxbcdt, cfg)
+    # seed the causal conv with the cached raw-input tail; causal_conv1d's
+    # own zero left-pad then sits *before* the seeded history, so outputs
+    # at the chunk's C positions see exactly the last conv_width inputs
+    conv_in = jnp.concatenate([cache["conv"].astype(dtype), xbc_raw], axis=1)
+    new_conv = conv_in[:, conv_in.shape[1] - w:]
+    xbc = jax.nn.silu(ops.causal_conv1d(conv_in, params["conv_w"],
+                                        params["conv_b"])[:, w:])
+    xs = xbc[..., :d_inner].reshape(b, c, n_heads, cfg.ssm_head_dim)
+    b_mat = xbc[..., d_inner:d_inner + n_state]
+    c_mat = xbc[..., d_inner + n_state:]
+    dt = jax.nn.softplus(dt_raw.astype(f32) + params["dt_bias"].astype(f32))
+
+    chunk = min(cfg.ssm_chunk, c)
+    while c % chunk:
+        chunk //= 2
+    y = ops.ssd(xs, dt.astype(dtype), params["a_log"], b_mat, c_mat,
+                params["d_skip"], chunk=max(chunk, 1))
+
+    # incoming-state contribution + outgoing state
+    a = -jnp.exp(params["a_log"].astype(f32))
+    cum = jnp.cumsum(dt * a[None, None, :], axis=1)            # (B,C,H)
+    h0 = cache["state"]                                         # (B,H,N,P) f32
+    y_carry = jnp.einsum("bsn,bsh,bhnp->bshp", c_mat.astype(f32),
+                         jnp.exp(cum), h0)
+    y = y.astype(f32) + y_carry
+    h_new = (jnp.exp(cum[:, -1])[..., None, None] * h0
+             + _final_ssd_state(xs, dt, params["a_log"], b_mat))
+
+    y = y.reshape(b, c, d_inner).astype(dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "state": h_new}
+
+
 def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None):
     d_inner, n_heads, n_state, conv_dim, _ = _dims(cfg)
     dtype = dtype or cfg.dtype

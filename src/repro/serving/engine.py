@@ -26,9 +26,15 @@ The paper's architecture, realized for model serving:
     lanes (per-lane positions down to the attention kernel), with
     batched on-device token selection and a single small ``(slots,)``
     token transfer per step — not a per-request, per-token host sync.
-    Prompt prefill is chunked (``prefill_chunk_tokens``) and interleaved
-    between decode steps so a newly arrived long prompt cannot stall
-    in-flight decodes for more than one chunk.
+    Prompt prefill is chunked and interleaved between decode steps so a
+    newly arrived long prompt cannot stall in-flight decodes for more
+    than one chunk — for **every** layer kind (attention rings are
+    read-then-scatter ring-wrap-safe, SSD/RG-LRU state threads
+    chunk-to-chunk; see ``model.chunked_prefill_caps``) — and the chunk
+    size is an **SLO-adaptive token budget**: each step admits up to
+    ``budget_tokens(occupancy)`` prefill tokens, sized so the measured
+    per-token chunk cost fits the slack ``step_slo_ms`` leaves over the
+    live step-time EWMA.
   * token selection is **per-lane**: each request carries its own
     temperature / top-k / top-p / seed (``Request`` fields), each lane
     carries its own PRNG key (split once per generated token, prefill's
@@ -76,11 +82,17 @@ from repro.serving import sampling as sampling_lib
 @dataclass
 class Request:
     """One serving request: a prompt, a decode budget, an SLO deadline —
-    and per-request sampling knobs.  ``temperature <= 0`` (the default)
-    means greedy; otherwise tokens are drawn from the
+    and per-request sampling + stop knobs.  ``temperature <= 0`` (the
+    default) means greedy; otherwise tokens are drawn from the
     temperature-scaled, top-k/top-p-filtered distribution with a PRNG
     stream rooted at ``seed`` (default: the request id), so a fixed seed
-    reproduces the exact token stream regardless of batch traffic."""
+    reproduces the exact token stream regardless of batch traffic.
+
+    Stop conditions: generation ends early when the model emits
+    ``eos_id`` or completes any of ``stop_sequences`` (token-id tuples);
+    the matched token(s) are trimmed from the output and the lane is
+    freed immediately — the next waiting request claims it on the very
+    next loop iteration, not after the dead lane burns out its budget."""
 
     request_id: int
     prompt: np.ndarray              # (S,) int32
@@ -92,6 +104,8 @@ class Request:
     top_k: int = 0                  # 0: disabled
     top_p: float = 1.0              # >= 1: disabled
     seed: Optional[int] = None      # PRNG root; None -> request_id
+    eos_id: Optional[int] = None    # stop (and trim) on this token
+    stop_sequences: Tuple[Tuple[int, ...], ...] = ()
 
 
 @dataclass
@@ -113,7 +127,7 @@ class _Job:
     """One request's life inside the batched decoder."""
 
     __slots__ = ("req", "lane", "lane_cache", "consumed", "out", "remaining",
-                 "done", "key")
+                 "done", "key", "stops")
 
     def __init__(self, req: Request):
         self.req = req
@@ -128,10 +142,24 @@ class _Job:
         self.key = (sampling_lib.make_lane_key(
             req.seed if req.seed is not None else req.request_id)
             if req.temperature > 0.0 else None)
+        self.stops = [list(s) for s in req.stop_sequences if len(s) > 0]
 
     @property
     def sampled(self) -> bool:
         return self.key is not None
+
+    def hit_stop(self) -> bool:
+        """True if the last emitted token was ``eos_id`` or completed a
+        stop sequence; the matched token(s) are trimmed from ``out``."""
+        if (self.req.eos_id is not None and self.out
+                and self.out[-1] == self.req.eos_id):
+            self.out.pop()
+            return True
+        for s in self.stops:
+            if len(self.out) >= len(s) and self.out[-len(s):] == s:
+                del self.out[-len(s):]
+                return True
+        return False
 
 
 class Replica:
@@ -142,19 +170,27 @@ class Replica:
 
       1. admit: waiting requests claim free lanes;
       2. prefill one chunk of at most one admitted prompt into its private
-         B=1 lane cache (bounds the stall it can impose on step 3);
+         B=1 lane cache, sized by the SLO budget (bounds the stall it can
+         impose on step 3);
       3. decode: one jitted step over ALL active lanes with the per-lane
          index vector; on-device batched token selection (argmax for an
          all-greedy batch, per-lane key-split sampling when any active
          lane carries ``temperature > 0``); one ``(slots,)`` host
-         transfer; finished lanes retire and free their slot.
+         transfer; finished lanes (budget exhausted, ``eos_id``, or a
+         completed stop sequence) retire and free their slot.
 
     Construction knobs:
 
     * ``slots`` — decode lanes (max concurrent requests in the batch);
     * ``capacity`` — KV ring depth per lane (tokens);
-    * ``prefill_chunk_tokens`` — chunked-prefill piece size (the bound on
-      how long a joining prompt may stall in-flight decodes);
+    * ``prefill_chunk_tokens`` — the prefill-budget **ceiling** per
+      interleave slot (no longer a fixed chunk size), clamped to the
+      stack's ``chunked_prefill_caps['max_chunk_tokens']`` and rounded
+      down to a power of two (the widest launchable bucket);
+    * ``step_slo_ms`` — per-step latency SLO: when ``> 0`` the budget
+      shrinks so the measured per-token chunk cost fits the slack the
+      SLO leaves over the live step-time EWMA at the current occupancy
+      (``budget_tokens``); ``0`` (default) always grants the ceiling;
     * ``serving_mesh`` (+ ``mesh_batch_axis``/``mesh_seq_axis``) — when
       set, every decode step runs the explicitly distributed split-S
       flash-decode over that mesh (``repro.serving.spmd_decode``) with
@@ -166,22 +202,28 @@ class Replica:
     lane-mode ``AppProfile`` attached by ``ServingFleet.add_replica``
     (or ``profile_replica``); the decode loop EWMAs live
     (occupancy, step_ms) and chunk-cost samples into it — the paper's
-    Update-Profile writer.  ``state()``/``free_slots()`` are the
-    telemetry the UP heartbeat publishes.
+    Update-Profile writer, and the signal ``budget_tokens`` adapts on.
+    ``state()``/``free_slots()`` are the telemetry the UP heartbeat
+    publishes.
 
     Weights + jitted prefill/decode/insert/sample executables are built
-    (and compiled) at construction.  Chunked prefill always runs the one
-    fixed ``(1, prefill_chunk_tokens)`` shape (final partial chunks are
-    zero-padded, then ``trim_cache`` invalidates the pad positions), so
-    for attention-only stacks serving never compiles.  Stacks without
-    chunked-prefill support (recurrent mixers) and prompts whose padded
-    length exceeds ``capacity`` fall back to whole-prompt prefill, which
+    (and compiled) at construction.  Chunked prefill is **universal**
+    (attention global/local with ring-wrap-safe scatter, SSD and RG-LRU
+    with chunk-to-chunk state threading — every kind except
+    cross-attention; see ``model.chunked_prefill_caps``) and runs exact,
+    unpadded chunks drawn from a power-of-two **bucket set**
+    ``{1, 2, 4, ..., prefill_chunk_tokens}``, each bucket shape compiled
+    at construction — so serving never compiles, under any budget, on or
+    off a mesh.  Cross-attention stacks and prompts longer than the
+    caps' ``max_prompt_tokens`` (a global-attention ring can hold at
+    most ``capacity`` tokens) fall back to whole-prompt prefill, which
     retraces once per distinct prompt length.
     """
 
     def __init__(self, name: str, cfg: ModelConfig, params, *,
                  slots: int = 2, capacity: int = 256,
-                 prefill_chunk_tokens: int = 32, serving_mesh=None,
+                 prefill_chunk_tokens: int = 32, step_slo_ms: float = 0.0,
+                 serving_mesh=None,
                  mesh_batch_axis: Optional[str] = "data",
                  mesh_seq_axis: str = "model"):
         self.name = name
@@ -189,10 +231,22 @@ class Replica:
         self.params = params
         self.capacity = capacity
         self.slots = slots
-        self.prefill_chunk_tokens = max(int(prefill_chunk_tokens), 1)
+        self.step_slo_ms = float(step_slo_ms)
+        self.prefill_caps = model_lib.chunked_prefill_caps(cfg, capacity)
+        requested = max(min(int(prefill_chunk_tokens),
+                            self.prefill_caps["max_chunk_tokens"]), 1)
+        # exact chunk widths come from this bucket set (compiled once each
+        # at warmup): any budget decomposes into buckets with no padding,
+        # so recurrent state never sees pad tokens and compiles stay
+        # bounded at log2(ceiling) shapes
+        self._chunk_buckets = [1]
+        while self._chunk_buckets[-1] * 2 <= requested:
+            self._chunk_buckets.append(self._chunk_buckets[-1] * 2)
+        # the ceiling IS the widest bucket: a non-power-of-two request
+        # rounds down so the advertised budget is actually launchable
+        self.prefill_chunk_tokens = self._chunk_buckets[-1]
         self.serving_mesh = serving_mesh
         self._mesh_axes = (mesh_batch_axis, mesh_seq_axis)
-        self._chunkable = model_lib.supports_chunked_prefill(cfg)
         # UP loop: set by ServingFleet.add_replica / profile_replica; the
         # decode loop EWMAs live (occupancy, step_ms) samples into it
         self.profile: Optional[AppProfile] = None
@@ -207,13 +261,11 @@ class Replica:
         # warm the executables (cold start happens HERE, not on requests)
         self._prefill = jax.jit(
             lambda p, toks: model_lib.prefill(p, toks, cfg, capacity))
-        # chunks are always the fixed shape (1, prefill_chunk_tokens) — the
-        # final partial chunk is zero-padded and `trim_cache` invalidates
-        # the pad positions — so the chunk executable compiles exactly once
+        # chunks are exact (never padded) and always one of the power-of-two
+        # bucket widths, so the chunk executable compiles once per bucket
         self._prefill_chunk = jax.jit(
             lambda p, c, toks, start: model_lib.prefill_chunk(
-                p, c, toks, start, cfg, return_all_logits=True))
-        self._trim = jax.jit(model_lib.trim_cache)
+                p, c, toks, start, cfg))
         self._decode = jax.jit(
             lambda p, cache, tok, idx: model_lib.decode_step(
                 p, cache, tok, idx, cfg))
@@ -236,12 +288,15 @@ class Replica:
         with self._mesh_scope():
             dummy = jnp.zeros((1, 8), jnp.int32)
             logits, lane_cache = self._prefill(params, dummy)
-            if self._chunkable and self.prefill_chunk_tokens <= capacity:
+            if self.prefill_caps["supported"]:
+                # compile every chunk bucket up front: a request must never
+                # pay a chunk-shape compile, whatever budget it is granted
                 lane0 = model_lib.init_cache(cfg, 1, capacity)
-                _, lane0 = self._prefill_chunk(
-                    params, lane0,
-                    jnp.zeros((1, self.prefill_chunk_tokens), jnp.int32), 0)
-                lane_cache = self._trim(lane0, 8)
+                start = 0
+                for w in self._chunk_buckets:
+                    _, lane0 = self._prefill_chunk(
+                        params, lane0, jnp.zeros((1, w), jnp.int32), start)
+                    start += w
             self._cache = self._insert(self._cache, lane_cache, 0)
             nxt, self._cache = self._step(params, self._cache,
                                           jnp.asarray(self._tok),
@@ -319,6 +374,10 @@ class Replica:
     def generate(self, req: Request) -> np.ndarray:
         """Submit a request to the batched decoder and block for its tokens.
         Concurrent callers share decode steps, not a semaphore."""
+        if len(req.prompt) == 0:
+            # reject in the CALLER's thread: an empty prompt reaching the
+            # decode thread would kill it and strand every other lane
+            raise ValueError(f"request {req.request_id}: empty prompt")
         job = _Job(req)
         with self._work:
             if self._shutdown:
@@ -385,47 +444,73 @@ class Replica:
                 active = [i for i, j in enumerate(self._lanes)
                           if j is not None]
 
-            # one prefill chunk for the oldest admitted prompt — bounded
-            # work, so in-flight decodes stall at most one chunk
+            # one prefill chunk for the oldest admitted prompt — budgeted
+            # work, so in-flight decodes stall at most the SLO slack
             if self._prefilling:
-                self._advance_prefill(self._prefilling[0])
+                self._advance_prefill(self._prefilling[0], len(active))
 
             if active:
                 self._decode_step(active)
 
-    def _advance_prefill(self, job: _Job) -> None:
+    def budget_tokens(self, occupancy: int) -> int:
+        """SLO-adaptive prefill budget for one interleave slot: how many
+        prompt tokens may prefill between this decode step and the next.
+
+        With no SLO (``step_slo_ms <= 0``), no active decode lanes to
+        stall, or no measured chunk cost yet, the ceiling
+        (``prefill_chunk_tokens``) is granted.  Otherwise the budget is
+        the SLO's slack over the measured step cadence at ``occupancy``
+        (both live-EWMA'd by the Update-Profile loop), divided by the
+        measured per-token chunk cost — floored at 1 token so admitted
+        prompts always make progress (the SLO shrinks chunks; it cannot
+        starve them)."""
+        mx = self.prefill_chunk_tokens
+        prof = self.profile
+        if self.step_slo_ms <= 0.0 or occupancy <= 0 or prof is None:
+            return mx
+        per_tok = prof.prefill_ms_per_token()
+        if per_tok <= 0.0 or prof.step_curve is None:
+            return mx
+        slack = self.step_slo_ms - prof.step_curve(float(occupancy))
+        return int(max(min(slack / per_tok, float(mx)), 1.0))
+
+    def _advance_prefill(self, job: _Job, occupancy: int = 0) -> None:
         prompt = job.req.prompt
         n = len(prompt)
-        chunk = self.prefill_chunk_tokens
-        # chunk path needs the zero-padded final chunk to stay inside the
-        # ring (pad positions must not wrap over real slots)
-        padded = -(-n // chunk) * chunk
-        if not self._chunkable or padded > self.capacity:
-            # single-shot prefill (recurrent stacks / near-capacity
-            # prompts); retraces once per distinct prompt length
+        caps = self.prefill_caps
+        bound = caps["max_prompt_tokens"]
+        if not caps["supported"] or (bound is not None and n > bound):
+            # single-shot prefill (cross-attention stacks / prompts a
+            # global-attention ring cannot hold); retraces once per
+            # distinct prompt length
             logits, job.lane_cache = self._prefill(
                 self.params, jnp.asarray(prompt)[None, :])
             job.consumed = n
-            last = -1
         else:
             if job.lane_cache is None:
                 job.lane_cache = model_lib.init_cache(self.cfg, 1,
                                                       self.capacity)
-            c = min(chunk, n - job.consumed)
-            buf = np.zeros((1, chunk), np.int32)
-            buf[0, :c] = prompt[job.consumed:job.consumed + c]
+            c = min(self.budget_tokens(occupancy), n - job.consumed)
+            # largest bucket that fits the budget and the remaining prompt:
+            # chunks stay exact (recurrent state never sees pad tokens) and
+            # every width is a warm compiled shape
+            w = 1
+            for bkt in self._chunk_buckets:
+                if bkt <= c:
+                    w = bkt
+            buf = jnp.asarray(prompt[job.consumed:job.consumed + w])[None, :]
             t0 = time.perf_counter()
             logits, job.lane_cache = self._prefill_chunk(
-                self.params, job.lane_cache, jnp.asarray(buf), job.consumed)
+                self.params, job.lane_cache, buf, job.consumed)
             prof = self.profile
             if prof is not None:
                 # sync so the UP sample is the chunk's real wall-clock, not
                 # its async-dispatch time (the decode stream pays the
                 # compute either way — this only defers host bookkeeping)
                 jax.block_until_ready(logits)
-                prof.observe_prefill_chunk((time.perf_counter() - t0) * 1e3)
-            job.consumed += c
-            last = c - 1                    # last REAL position in the chunk
+                prof.observe_prefill_chunk((time.perf_counter() - t0) * 1e3,
+                                           tokens=w)
+            job.consumed += w
         if job.consumed < n:
             return
         # prompt fully prefilled: splice the lane in and emit token 0 —
@@ -434,16 +519,14 @@ class Replica:
         if job.sampled:
             keys, tok0 = self._sample_first(
                 jnp.asarray(job.key[None]),
-                jnp.asarray(logits[0, last], jnp.float32)[None],
+                jnp.asarray(logits[0, -1], jnp.float32)[None],
                 jnp.full((1,), job.req.temperature, jnp.float32),
                 jnp.full((1,), job.req.top_k, jnp.int32),
                 jnp.full((1,), job.req.top_p, jnp.float32))
             first = int(tok0[0])
             job.key = np.asarray(keys[0], np.uint32)
         else:
-            first = int(jnp.argmax(logits[0, last]))
-        if last >= 0:
-            job.lane_cache = self._trim(job.lane_cache, n)
+            first = int(jnp.argmax(logits[0, -1]))
         self._cache = self._insert(self._cache, job.lane_cache, job.lane)
         job.lane_cache = None
         lane = job.lane
@@ -467,6 +550,8 @@ class Replica:
             if job.remaining > 0:
                 job.out.append(first)
                 job.remaining -= 1
+                if job.hit_stop():          # eos/stop on the very first token
+                    job.remaining = 0
             if job.remaining == 0:
                 finished = True
             else:
@@ -516,6 +601,10 @@ class Replica:
                 job.remaining -= 1
                 self._tok[lane, 0] = nxt_np[lane]
                 self._idx[lane] += 1
+                # stop conditions free the lane immediately: the matched
+                # eos/stop-sequence tokens are trimmed from the output
+                if job.hit_stop():
+                    job.remaining = 0
                 if job.remaining == 0:
                     self._lanes[lane] = None
                     # freed lanes must not keep forcing the sampled path
@@ -578,9 +667,10 @@ def measure_step_curve(rep: Replica, steps_per_point: int = 6,
             step_ms.append(best)
 
         chunk_ms = 0.0
-        if rep._chunkable and rep.prefill_chunk_tokens <= rep.capacity:
+        if rep.prefill_caps["supported"]:
+            # time the widest bucket (the shape the full budget runs)
             lane = model_lib.init_cache(rep.cfg, 1, rep.capacity)
-            buf = jnp.zeros((1, rep.prefill_chunk_tokens), jnp.int32)
+            buf = jnp.zeros((1, rep._chunk_buckets[-1]), jnp.int32)
             best = float("inf")
             for i in range(1 + steps_per_point):
                 t0 = time.perf_counter()
@@ -636,8 +726,11 @@ def profile_replica(rep: Replica, prompt_lens=(8, 32, 128),
         step_curve=Curve(list(occs), list(step_ms)),
         tokens_per_task=float(new_tokens),
         prefill_chunk_ms=chunk_ms,
-        prefill_chunk_tokens=float(rep.prefill_chunk_tokens
-                                   if rep._chunkable else 0))
+        # the reference chunk width chunk_ms was measured at (the widest
+        # bucket): prefill_ms_per_token / interleave_ms / budget_tokens
+        # all derive their per-token cost from this pair
+        prefill_chunk_tokens=float(rep._chunk_buckets[-1]
+                                   if rep.prefill_caps["supported"] else 0))
     return prof
 
 

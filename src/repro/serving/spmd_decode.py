@@ -97,17 +97,38 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
         in_range = jnp.logical_and(off >= 0, off < s_loc)
         off_c = jnp.clip(off, 0, s_loc - 1)
         if idx_batched:
-            # per-lane conditional ring write: lane b's slot may land in a
-            # different S-shard than lane c's; each shard scatters the new
-            # K/V for ALL lanes at their clipped offsets, then keeps the
-            # write only for lanes it owns
-            lanes = jnp.arange(k_l.shape[0])
-            k_upd = k_l.at[lanes, off_c].set(nk_l[:, 0].astype(k_l.dtype))
-            v_upd = v_l.at[lanes, off_c].set(nv_l[:, 0].astype(v_l.dtype))
-            k_l = jnp.where(in_range[:, None, None, None], k_upd, k_l)
-            v_l = jnp.where(in_range[:, None, None, None], v_upd, v_l)
-            pos_upd = pos_l.at[lanes, off_c].set(idx)
-            pos_l = jnp.where(in_range[:, None], pos_upd, pos_l)
+            def scatter_write(k_l, v_l, pos_l):
+                # per-lane conditional ring write: lane b's slot may land
+                # in a different S-shard than lane c's; each shard
+                # scatters the new K/V for ALL lanes at their clipped
+                # offsets, then keeps the write only for lanes it owns
+                lanes = jnp.arange(k_l.shape[0])
+                k_upd = k_l.at[lanes, off_c].set(nk_l[:, 0].astype(k_l.dtype))
+                v_upd = v_l.at[lanes, off_c].set(nv_l[:, 0].astype(v_l.dtype))
+                k_l = jnp.where(in_range[:, None, None, None], k_upd, k_l)
+                v_l = jnp.where(in_range[:, None, None, None], v_upd, v_l)
+                pos_upd = pos_l.at[lanes, off_c].set(idx)
+                pos_l = jnp.where(in_range[:, None], pos_upd, pos_l)
+                return k_l, v_l, pos_l
+
+            def aligned_write(k_l, v_l, pos_l):
+                # all lanes at the same depth (common right after a batch
+                # of simultaneous joins): one aligned dynamic_update_slice
+                # instead of the per-lane scatter
+                inr = in_range[0]
+                k_new = jax.lax.dynamic_update_slice(
+                    k_l, nk_l.astype(k_l.dtype), (0, off_c[0], 0, 0))
+                v_new = jax.lax.dynamic_update_slice(
+                    v_l, nv_l.astype(v_l.dtype), (0, off_c[0], 0, 0))
+                pos_new = jax.lax.dynamic_update_slice(
+                    pos_l, idx[:, None], (0, off_c[0]))
+                return (jnp.where(inr, k_new, k_l),
+                        jnp.where(inr, v_new, v_l),
+                        jnp.where(inr, pos_new, pos_l))
+
+            k_l, v_l, pos_l = jax.lax.cond(
+                jnp.all(idx == idx[0]), aligned_write, scatter_write,
+                k_l, v_l, pos_l)
         else:
             # aligned lanes: one dynamic slice write, owning shard's sticks
             k_new = jax.lax.dynamic_update_slice(k_l, nk_l.astype(k_l.dtype),

@@ -1,0 +1,301 @@
+"""Universal chunked prefill: per-kind chunked-vs-full equivalence
+(SSD / RG-LRU state threading, ring-wrap-safe sliding windows), the
+per-kind capability report, the SLO-adaptive chunk budget, stop
+conditions, and recurrent-stack continuous batching."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.profile import AppProfile, Curve
+from repro.models import model as M
+from repro.serving.engine import Replica, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _f32(arch):
+    return get_smoke_config(arch).replace(param_dtype=jnp.float32,
+                                          dtype=jnp.float32)
+
+
+def _chunked_vs_whole(cfg, plen, capacity, chunk):
+    """Chunk-prefill a prompt in ``chunk``-token pieces and compare the
+    last-position logits and one decode continuation against whole-prompt
+    prefill."""
+    params = M.init_model(KEY, cfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(2, cfg.vocab_size, size=(plen,)).astype(np.int32)
+    lg_whole, cache_whole = M.prefill(params, jnp.asarray(prompt)[None], cfg,
+                                      capacity=capacity)
+    cache = M.init_cache(cfg, 1, capacity)
+    for c0 in range(0, plen, chunk):
+        piece = jnp.asarray(prompt[c0:c0 + chunk])[None]
+        lg, cache = M.prefill_chunk(params, cache, piece, c0, cfg)
+    assert float(jnp.abs(lg[:, -1:] - lg_whole).max()) < 1e-4
+    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    lg2, _ = M.decode_step(params, cache, tok, plen, cfg)
+    lg2w, _ = M.decode_step(params, cache_whole, tok, plen, cfg)
+    assert float(jnp.abs(lg2 - lg2w).max()) < 1e-4
+
+
+def test_chunked_prefill_ssd_threads_state():
+    """Pure-SSD stack (mamba2): chunk-to-chunk conv + SSD state threading
+    must reproduce whole-prompt prefill exactly."""
+    _chunked_vs_whole(_f32("mamba2-780m"), plen=19, capacity=64, chunk=5)
+
+
+def test_chunked_prefill_rglru_threads_state():
+    """Griffin stack (recurrentgemma: RG-LRU + local attention): hidden
+    state and conv tail thread across chunks, local attention rings stay
+    exact."""
+    _chunked_vs_whole(_f32("recurrentgemma-9b"), plen=28, capacity=32,
+                      chunk=5)
+
+
+def test_chunked_prefill_sliding_window_spans_ring_wrap():
+    """Sliding-window stack (gemma3 5:1 local:global, smoke window 16):
+    prompt length and chunking chosen so chunks STRADDLE the local
+    layers' ring boundary (n=16) at a non-slot-aligned offset — the
+    read-then-scatter path must not let a wrapping chunk overwrite keys
+    its own earlier queries still need."""
+    _chunked_vs_whole(_f32("gemma3-27b"), plen=28, capacity=32, chunk=5)
+
+
+def test_chunked_prefill_pure_local_window_beyond_capacity_bound():
+    """A local-only stack (mixtral smoke, window 16) is exact even when
+    the prompt wraps the window ring repeatedly (prompt 3x the ring)."""
+    cfg = _f32("mixtral-8x22b").replace(num_experts=0, num_experts_per_tok=0)
+    _chunked_vs_whole(cfg, plen=48, capacity=32, chunk=7)
+
+
+def test_chunked_prefill_caps_report():
+    """The per-kind capability report that replaced the all-or-nothing
+    supports_chunked_prefill gate."""
+    caps = M.chunked_prefill_caps(get_smoke_config("mamba2-780m"), 64)
+    assert caps == {"kinds": {"ssm": True}, "supported": True,
+                    "max_chunk_tokens": 64, "max_prompt_tokens": None}
+
+    caps = M.chunked_prefill_caps(get_smoke_config("recurrentgemma-9b"), 64)
+    assert caps["kinds"] == {"rglru": True, "attn:local": True}
+    assert caps["supported"]
+    assert caps["max_chunk_tokens"] == 16        # the local ring (window 16)
+    assert caps["max_prompt_tokens"] is None     # bounded state: unbounded
+
+    caps = M.chunked_prefill_caps(get_smoke_config("gemma3-27b"), 64)
+    assert caps["supported"]
+    assert caps["max_chunk_tokens"] == 16
+    assert caps["max_prompt_tokens"] == 64       # global layers bound it
+
+    # cross-attention is the one unsupported kind
+    caps = M.chunked_prefill_caps(get_smoke_config("llama-3.2-vision-90b"), 64)
+    assert caps["kinds"]["cross"] is False
+    assert not caps["supported"]
+
+    # capacity smaller than the window: the ring cannot hold the window,
+    # so exactness is only guaranteed up to capacity
+    caps = M.chunked_prefill_caps(get_smoke_config("gemma3-27b"), 8)
+    assert caps["max_prompt_tokens"] == 8
+
+
+@pytest.fixture(scope="module")
+def ssm_setup():
+    cfg = _f32("mamba2-780m")
+    params = M.init_model(KEY, cfg)
+    return cfg, params
+
+
+def _reference_tokens(params, cfg, prompt, max_new, capacity=64):
+    logits, cache = M.prefill(params, jnp.asarray(prompt)[None], cfg,
+                              capacity=capacity)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out, pos = [], len(prompt)
+    for _ in range(max_new):
+        out.append(int(tok[0, 0]))
+        lg, cache = M.decode_step(params, cache, tok, pos, cfg)
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        pos += 1
+    return out
+
+
+def test_recurrent_stack_continuous_batching_token_identity():
+    """A mixed recurrent stack (RG-LRU + local attention) runs the full
+    continuous-batching loop with chunked prefill — including a lane that
+    joins mid-stream and chunk-prefills against a live decode — and every
+    lane's greedy tokens equal the sequential batch-1 reference."""
+    cfg = _f32("recurrentgemma-9b")
+    params = M.init_model(KEY, cfg)
+    rep = Replica("rec-cb", cfg, params, slots=2, capacity=64,
+                  prefill_chunk_tokens=4)
+    assert rep.prefill_caps["supported"]
+    rng = np.random.default_rng(11)
+    long_prompt = rng.integers(2, cfg.vocab_size, size=(10,)).astype(np.int32)
+    late_prompt = rng.integers(2, cfg.vocab_size, size=(17,)).astype(np.int32)
+    out = {}
+
+    def run_long():
+        out["long"] = rep.generate(Request(0, long_prompt, 20, 1e9)).tolist()
+
+    def run_late():
+        deadline = time.time() + 5.0
+        while rep.state().running < 1 and time.time() < deadline:
+            time.sleep(0.002)
+        out["late"] = rep.generate(Request(1, late_prompt, 6, 1e9)).tolist()
+
+    t1 = threading.Thread(target=run_long)
+    t2 = threading.Thread(target=run_late)
+    t1.start(); t2.start(); t1.join(); t2.join()
+    assert out["long"] == _reference_tokens(params, cfg, long_prompt, 20)
+    assert out["late"] == _reference_tokens(params, cfg, late_prompt, 6)
+    rep.stop()
+
+
+def test_ssd_stack_serves_through_replica(ssm_setup):
+    """The attention-free config (mamba2) — whole-prompt-only before this
+    change — runs the chunked continuous-batching path, token-identical
+    to the sequential reference."""
+    cfg, params = ssm_setup
+    rep = Replica("ssm-cb", cfg, params, slots=2, capacity=64,
+                  prefill_chunk_tokens=4)
+    assert rep.prefill_caps["supported"]
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(2, cfg.vocab_size, size=(13,)).astype(np.int32)
+    got = rep.generate(Request(0, prompt, 8, 1e9)).tolist()
+    assert got == _reference_tokens(params, cfg, prompt, 8)
+    rep.stop()
+
+
+# ------------------------------------------------------------- SLO budget
+def _lane_profile(step_ms, chunk_ms=2.0, chunk_tokens=32.0):
+    return AppProfile(
+        app_id="serve", base_ms=100.0,
+        contention=Curve([float(i + 1) for i in range(len(step_ms))],
+                         list(step_ms)),
+        step_curve=Curve([float(i + 1) for i in range(len(step_ms))],
+                         list(step_ms)),
+        tokens_per_task=8.0, prefill_chunk_ms=chunk_ms,
+        prefill_chunk_tokens=chunk_tokens)
+
+
+def test_budget_monotone_under_rising_occupancy(ssm_setup):
+    """budget_tokens shrinks (never grows) as occupancy rises along a
+    rising measured step curve, stays within [1, ceiling], and grants the
+    full ceiling when the SLO is off or no lanes can stall."""
+    cfg, params = ssm_setup
+    rep = Replica("budget", cfg, params, slots=4, capacity=64,
+                  prefill_chunk_tokens=32, step_slo_ms=10.0)
+    rep.profile = _lane_profile(step_ms=[2.0, 4.0, 7.0, 9.5],
+                                chunk_ms=8.0, chunk_tokens=32.0)
+    # per-token chunk cost 0.25ms; slack at occ 1..4: 8, 6, 3, 0.5 ms
+    budgets = [rep.budget_tokens(occ) for occ in range(0, 5)]
+    assert budgets[0] == 32                      # nothing to stall
+    assert budgets[1:] == [32, 24, 12, 2]
+    assert all(b1 >= b2 for b1, b2 in zip(budgets[1:], budgets[2:]))
+    assert all(1 <= b <= 32 for b in budgets)
+    # slack below one token's cost still floors at 1: admitted prompts
+    # always make progress
+    rep.profile = _lane_profile(step_ms=[50.0], chunk_ms=8.0)
+    assert rep.budget_tokens(1) == 1
+    # SLO off -> ceiling, whatever the curve says
+    rep.step_slo_ms = 0.0
+    assert rep.budget_tokens(4) == 32
+    rep.stop()
+
+
+def test_budget_spends_only_warm_bucket_widths(ssm_setup):
+    """Whatever the budget grants, the engine only launches power-of-two
+    bucket widths (the shapes compiled at warmup) and exact final pieces:
+    a 13-token prompt under budget 8 decomposes as 8+4+1."""
+    cfg, params = ssm_setup
+    rep = Replica("buckets", cfg, params, slots=2, capacity=64,
+                  prefill_chunk_tokens=8)
+    assert rep._chunk_buckets == [1, 2, 4, 8]
+    widths = []
+    orig = rep._prefill_chunk
+
+    def spy(p, c, toks, start):
+        widths.append(int(toks.shape[1]))
+        return orig(p, c, toks, start)
+
+    rep._prefill_chunk = spy
+    prompt = np.arange(2, 15, dtype=np.int32)            # 13 tokens
+    got = rep.generate(Request(0, prompt, 4, 1e9)).tolist()
+    assert widths == [8, 4, 1]
+    assert got == _reference_tokens(params, cfg, prompt, 4)
+    rep.stop()
+
+
+def test_non_power_of_two_ceiling_rounds_down(ssm_setup):
+    """A non-power-of-two prefill_chunk_tokens rounds down to the widest
+    launchable bucket — the advertised ceiling is always reachable."""
+    cfg, params = ssm_setup
+    rep = Replica("pow2", cfg, params, slots=2, capacity=64,
+                  prefill_chunk_tokens=12)
+    assert rep._chunk_buckets == [1, 2, 4, 8]
+    assert rep.prefill_chunk_tokens == 8
+    assert rep.budget_tokens(0) == 8
+    rep.stop()
+
+
+def test_empty_prompt_rejected_in_caller_thread(ssm_setup):
+    """An empty prompt raises in the caller's thread instead of reaching
+    (and killing) the shared decode thread; the replica keeps serving."""
+    cfg, params = ssm_setup
+    rep = Replica("empty", cfg, params, slots=2, capacity=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        rep.generate(Request(0, np.array([], np.int32), 4, 1e9))
+    prompt = np.arange(2, 10, dtype=np.int32)
+    assert len(rep.generate(Request(1, prompt, 3, 1e9))) == 3
+    rep.stop()
+
+
+# ---------------------------------------------------------- stop conditions
+def _truncate_eos(toks, eos):
+    return toks[:toks.index(eos)] if eos in toks else toks
+
+
+def test_eos_frees_lane_immediately(ssm_setup):
+    """A request whose stream hits eos_id ends early (eos trimmed), the
+    lane frees for the next waiting request, and a no-eos request next to
+    it is untouched."""
+    cfg, params = ssm_setup
+    rep = Replica("eos", cfg, params, slots=1, capacity=64,
+                  prefill_chunk_tokens=8)
+    prompt = np.arange(2, 12, dtype=np.int32)
+    full = rep.generate(Request(0, prompt, 6, 1e9)).tolist()
+    eos = full[2]
+    got = rep.generate(Request(1, prompt, 6, 1e9, eos_id=eos)).tolist()
+    assert got == _truncate_eos(full, eos)
+    # slots=1: the freed lane must admit the next request (no hang)
+    assert rep.generate(Request(2, prompt, 6, 1e9)).tolist() == full
+    assert rep.free_slots() == 1
+    rep.stop()
+
+
+def test_stop_sequence_trimmed_from_output(ssm_setup):
+    cfg, params = ssm_setup
+    rep = Replica("stopseq", cfg, params, slots=1, capacity=64,
+                  prefill_chunk_tokens=8)
+    prompt = np.arange(3, 13, dtype=np.int32)
+    full = rep.generate(Request(0, prompt, 6, 1e9)).tolist()
+    seq = tuple(full[1:3])
+    got = rep.generate(Request(1, prompt, 6, 1e9,
+                               stop_sequences=(seq,))).tolist()
+    # expected: everything before the first completed match, matched
+    # tokens trimmed
+    expect = full
+    for i in range(len(full) - len(seq) + 1):
+        if tuple(full[i:i + len(seq)]) == seq:
+            expect = full[:i]
+            break
+    assert got == expect
+    # an eos hit on the very FIRST (prefill-emitted) token frees the lane
+    # before it ever joins the decode batch
+    got0 = rep.generate(Request(2, prompt, 6, 1e9, eos_id=full[0])).tolist()
+    assert got0 == []
+    assert rep.free_slots() == 1
+    rep.stop()
