@@ -306,6 +306,209 @@ print(json.dumps({
                   f"step_ms={rec['step_ms_by_occupancy']}")
 
 
+def bench_serving_churn():
+    """Deadline-hit rate under churn — the ROADMAP's tracked robustness
+    metric.  Two parts land in the ``churn`` row of BENCH_serving.json:
+
+    * **sim**: kill/rejoin and partition/heal scenarios through the
+      discrete-event simulator (deterministic, covers every churn kind);
+    * **live**: a two-replica ServingFleet under a burst of deadlined
+      requests, with a ``FaultPlan`` crashing the replica DDS loaded up
+      (the source) mid-burst — the monitor must evict it and the
+      in-flight requests must fail over to the survivor.  Records hit
+      rate, lost count, and the p99 latency of failed-over requests
+      (the price of a death).
+
+    Zero silent losses is asserted, not just reported: every submitted
+    request returns ok (full token budget) or carries an explicit error.
+    """
+    import threading
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core.policies import make_policy
+    from repro.core.simulator import ChurnEvent, SimConfig, run_sim
+    from repro.ft import faults
+    from repro.models import model as M
+    from repro.serving.engine import (Replica, Request, ServingFleet,
+                                      profile_replica)
+
+    # ---- sim churn scenarios (every kind, deterministic) ----
+    sim_metrics = {}
+    scenarios = {
+        "kill_rejoin": (ChurnEvent(500, "kill", "rasp2"),
+                        ChurnEvent(2000, "rejoin", "rasp2")),
+        "partition_heal": (ChurnEvent(500, "partition", "edge_server"),
+                           ChurnEvent(1500, "heal", "edge_server")),
+    }
+    for name, churn in scenarios.items():
+        cfg_s = SimConfig(num_tasks=200, interval_ms=30, constraint_ms=3000,
+                          churn=churn)
+        res = run_sim(make_policy("DDS"), cfg_s)
+        for rec in res.records:     # every task accounted, none silent
+            assert rec.finished_ms < float("inf") or rec.lost or rec.dropped
+        sim_metrics[name] = {
+            "hit_rate": round(res.num_met / cfg_s.num_tasks, 3),
+            "lost": res.num_lost,
+            "failed_over": res.num_failed_over,
+        }
+
+    # ---- live: crash a replica under open-loop load ----
+    cfg = get_smoke_config("granite-8b").replace(param_dtype=jnp.float32,
+                                                 dtype=jnp.float32)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rep0 = Replica("serve0", cfg, params, slots=2, capacity=128)
+    rep1 = Replica("serve1", cfg, params, slots=4, capacity=128)
+    prof0 = profile_replica(rep0, prompt_lens=(8, 16), new_tokens=8)
+    prof1 = profile_replica(rep1, prompt_lens=(8, 16), new_tokens=8)
+    fleet = ServingFleet(make_policy("DDS"), source="serve0",
+                         coordinator="serve0", heartbeat_ms=20.0,
+                         staleness_factor=5.0,       # 100 ms alarm
+                         progress_timeout_ms=2000.0, max_attempts=3)
+    fleet.add_replica(rep0, profile=prof0)
+    fleet.add_replica(rep1, profile=prof1)
+
+    prompt_len, new_tokens, n_requests = 16, 16, 12
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab_size,
+                            size=(prompt_len,)).astype(np.int32)
+               for _ in range(n_requests)]
+    results = [None] * n_requests
+
+    # one warm end-to-end request measures what a healthy fleet actually
+    # delivers (profile math undershoots the Python-loop overhead badly);
+    # the SLO then leaves a failed-over request room for one detection
+    # window (staleness alarm) plus a full re-decode on the survivor
+    warm = rng.integers(2, cfg.vocab_size,
+                        size=(prompt_len,)).astype(np.int32)
+    t0 = time.perf_counter()
+    fleet.submit(Request(999, warm, new_tokens, 1e9))
+    measured_ms = (time.perf_counter() - t0) * 1e3
+    deadline_ms = max(8.0 * measured_ms, 6.0 * fleet.staleness_alarm_ms)
+
+    # DDS loads up the source first, so THAT is the replica worth killing:
+    # the burst's makespan is ~n/slots = 6x a single request, the crash
+    # lands at ~2x, guaranteeing live lanes die and must fail over
+    kill_at_ms = 2.0 * measured_ms
+    inj = faults.inject(fleet, "serve0",
+                        faults.FaultPlan([faults.crash(kill_at_ms)]))
+
+    def run(i):
+        results[i] = fleet.submit(
+            Request(i, prompts[i], new_tokens, deadline_ms))
+
+    inj.arm()
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(n_requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    inj.stop()
+
+    # zero silent losses: every request returned, each ok with its full
+    # token budget or carrying an explicit error
+    assert all(r is not None for r in results)
+    for r in results:
+        assert (r.ok and len(r.tokens) == new_tokens) or r.error, r
+    # the loaded replica died mid-burst and the monitor caught it
+    assert "serve0" in fleet.dead, fleet.dead
+    hit = sum(1 for r in results if r.met(deadline_ms)) / n_requests
+    fo_lat = sorted(r.latency_ms() for r in results if r.attempts > 1)
+    fo_p99 = fo_lat[max(int(0.99 * len(fo_lat)) - 1, 0)] if fo_lat else 0.0
+    live = {
+        "requests": n_requests,
+        "deadline_ms": round(deadline_ms, 1),
+        "deadline_hit_rate": round(hit, 3),
+        "lost": fleet.lost,
+        "failovers": fleet.failovers,
+        "failover_p99_ms": round(fo_p99, 1),
+        "dead_replicas": list(fleet.dead),
+        "placements": dict(fleet.stats),
+    }
+    fleet.stop()
+
+    SERVING_METRICS["churn"] = {"sim": sim_metrics, "live": live}
+    rows = [{"scenario": k, **v} for k, v in sim_metrics.items()]
+    rows.append({"scenario": "live_crash", "hit_rate": hit,
+                 "lost": fleet.lost, "failover_p99_ms": round(fo_p99, 1)})
+    return rows, (f"live_hit={hit:.2f} lost={fleet.lost} "
+                  f"failovers={fleet.failovers} fo_p99={fo_p99:.0f}ms "
+                  f"dead={fleet.dead}")
+
+
+def chaos_smoke():
+    """Tiny churn scenario for CI (``--chaos-smoke``): asserts zero
+    silently-lost requests end to end — simulator accounting closes, and a
+    live replica crashed mid-decode yields only explicit outcomes (every
+    blocked caller returns; no hangs, no truncated-but-\"ok\" streams)."""
+    import threading
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core.policies import make_policy
+    from repro.core.simulator import ChurnEvent, SimConfig, run_sim
+    from repro.ft import faults
+    from repro.models import model as M
+    from repro.serving.engine import Replica, Request, ServingFleet
+
+    # sim: a kill under load — every task must end met, late, lost, or
+    # dropped (no task may simply vanish from the books)
+    cfg_s = SimConfig(num_tasks=100, interval_ms=30, constraint_ms=2000,
+                      churn=(ChurnEvent(400, "kill", "rasp2"),
+                             ChurnEvent(1800, "rejoin", "rasp2")))
+    res = run_sim(make_policy("DDS"), cfg_s)
+    unaccounted = [r for r in res.records
+                   if r.finished_ms == float("inf")
+                   and not r.lost and not r.dropped]
+    assert not unaccounted, f"{len(unaccounted)} tasks silently lost"
+
+    # live: crash the only replica with requests in flight; every submit
+    # must return an explicit outcome (ok with the full budget, or error)
+    cfg = get_smoke_config("granite-8b").replace(param_dtype=jnp.float32,
+                                                 dtype=jnp.float32)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rep = Replica("chaos0", cfg, params, slots=2, capacity=64)
+    fleet = ServingFleet(make_policy("DDS"), source="chaos0",
+                         coordinator="chaos0", heartbeat_ms=20.0,
+                         staleness_factor=5.0, progress_timeout_ms=1000.0,
+                         max_attempts=2, retry_backoff_ms=5.0)
+    fleet.add_replica(rep)
+    inj = faults.inject(fleet, "chaos0")
+
+    n, new_tokens = 3, 64
+    results = [None] * n
+
+    def run(i):
+        results[i] = fleet.submit(Request(
+            i, np.arange(2, 10, dtype=np.int32), new_tokens, 1e9))
+
+    threads = [threading.Thread(target=run, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    time.sleep(0.3)                 # let decode get rolling, then kill it
+    inj.apply("crash")
+    for t in threads:
+        t.join(timeout=120.0)
+    assert not any(t.is_alive() for t in threads), \
+        "a submit hung after the replica crashed — silent loss"
+    n_ok = sum(1 for r in results if r is not None and r.ok)
+    for r in results:
+        assert r is not None
+        assert (r.ok and len(r.tokens) == new_tokens) or r.error, r
+    assert fleet.lost == n - n_ok    # every failure accounted, none silent
+    inj.stop()
+    fleet.stop()
+    rows = [{"sim_lost": res.num_lost, "sim_failed_over": res.num_failed_over,
+             "live_ok": n_ok, "live_lost": fleet.lost}]
+    return rows, (f"sim_accounted=all live_ok={n_ok} "
+                  f"live_lost={fleet.lost} no_silent_losses=True")
+
+
 def live_profile_bench():
     """Measure a real jitted model step under thread contention on this host
     (the live analogue of Tables V/VI)."""
@@ -341,6 +544,10 @@ def main() -> None:
     ap.add_argument("--serving-smoke", action="store_true",
                     help="run only the serving benches and write the JSON "
                          "(the CI perf-trajectory smoke)")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="run only the tiny churn/fault-injection scenario "
+                         "and assert zero silently-lost requests (CI); does "
+                         "not write the serving JSON")
     ap.add_argument("--serving-json",
                     default=os.path.join(os.path.dirname(
                         os.path.abspath(__file__)), "..",
@@ -352,8 +559,11 @@ def main() -> None:
                ("bench_serving_recurrent_throughput",
                 bench_serving_recurrent_throughput),
                ("bench_serving_routing", bench_serving_routing),
-               ("bench_serving_mesh_step_curve", bench_serving_mesh_step_curve)]
-    if args.serving_smoke:
+               ("bench_serving_mesh_step_curve", bench_serving_mesh_step_curve),
+               ("bench_serving_churn", bench_serving_churn)]
+    if args.chaos_smoke:
+        benches = [("chaos_smoke", chaos_smoke)]
+    elif args.serving_smoke:
         benches = serving
     else:
         benches = list(BENCHES) + serving
@@ -365,7 +575,9 @@ def main() -> None:
         us, derived = _timed(fn)
         print(f"{name},{us:.0f},{derived}", flush=True)
 
-    if SERVING_METRICS:
+    # --chaos-smoke is an assertion run, not a metrics run: writing here
+    # would clobber the full serving row set with a single row
+    if SERVING_METRICS and not args.chaos_smoke:
         path = os.path.abspath(args.serving_json)
         with open(path, "w") as f:
             json.dump(SERVING_METRICS, f, indent=2, sort_keys=True)

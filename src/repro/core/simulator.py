@@ -10,7 +10,17 @@ Faithfully models the evaluation setup of Section V:
   * Update-Profile heartbeats: the coordinator sees peer state that is up to
     ``heartbeat_ms`` stale (paper: 20 ms) — decisions tolerate staleness,
   * UDP-style message loss on links (paper sends requests over UDP),
-  * background CPU load on the coordinator (Fig 7/8 stress parameter).
+  * background CPU load on the coordinator (Fig 7/8 stress parameter),
+  * **churn**: timed ``ChurnEvent``s kill / rejoin / partition / heal a
+    node mid-run.  Death is detected ``detect_ms`` after the fact (the
+    staleness-alarm window); until then the coordinator keeps routing to
+    the dead node on its stale view — those tasks, plus the ones the node
+    held when it died, re-enter at the source after the detection delay
+    (bounded, deadline-aware retries), exactly mirroring the serving
+    fleet's failover path.  Stale-incarnation finish events are discarded
+    (a kill+rejoin must not resurrect the old run's completions) and a
+    task that completes on two placements (retry raced the original)
+    counts once — first completion wins.
 
 Deterministic given the config (loss draws use a seeded RNG).
 """
@@ -27,6 +37,24 @@ from repro.core.policies import FORWARD, LOCAL, NodeView, Policy
 from repro.core.profile import (FACE, DeviceProfile, paper_edge_server,
                                 paper_raspberry_pi)
 
+CHURN_KINDS = ("kill", "rejoin", "partition", "heal")
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One timed membership change: at ``at_ms``, ``node`` is killed
+    (process death: queue and running work vanish), rejoins empty,
+    is partitioned (keeps computing, but nothing in or out), or heals."""
+
+    at_ms: float
+    kind: str
+    node: str
+
+    def __post_init__(self):
+        if self.kind not in CHURN_KINDS:
+            raise ValueError(f"unknown churn kind {self.kind!r}; "
+                             f"expected one of {CHURN_KINDS}")
+
 
 @dataclass
 class SimConfig:
@@ -42,6 +70,9 @@ class SimConfig:
     rpi_slots: int = 4
     seed: int = 0
     loss_prob: float = 0.0
+    churn: Tuple[ChurnEvent, ...] = ()
+    detect_ms: float = 100.0        # staleness-alarm window (death -> known)
+    retry_max: int = 3              # placements per task, first included
 
 
 @dataclass
@@ -50,6 +81,9 @@ class TaskRecord:
     finished_ms: float = float("inf")
     node: str = ""
     dropped: bool = False
+    attempts: int = 1               # placements tried (>1: failed over)
+    lost: bool = False              # terminally failed: retries exhausted
+                                    # or no deadline slack left to retry in
 
     @property
     def latency_ms(self) -> float:
@@ -69,6 +103,14 @@ class SimResult:
     @property
     def num_met(self) -> int:
         return sum(1 for r in self.records if r.met)
+
+    @property
+    def num_lost(self) -> int:
+        return sum(1 for r in self.records if r.lost)
+
+    @property
+    def num_failed_over(self) -> int:
+        return sum(1 for r in self.records if r.attempts > 1)
 
     @property
     def latencies(self) -> List[float]:
@@ -91,6 +133,12 @@ class _SimNode:
         # instead of re-sorting the whole queue on every insert
         self.waiting: List = []
         self.cpu_load = profile.cpu_load
+        # churn state: a killed node's scheduled finish events carry the
+        # old incarnation and are discarded when they fire
+        self.alive = True
+        self.partitioned = False
+        self.incarnation = 0
+        self.active: Dict[int, Task] = {}   # task_id -> running task
 
     @property
     def free_slots(self) -> int:
@@ -130,6 +178,10 @@ class Simulator:
         self._seq = itertools.count()
         self.records: Dict[int, TaskRecord] = {}
         self._n_done = 0
+        # coordinator-side knowledge of deaths: a node enters this set only
+        # detect_ms AFTER it actually died (the staleness-alarm window) —
+        # until then routing keeps trusting the stale heartbeat view
+        self._presumed_dead: set = set()
 
     # ----------------------------------------------------------- event loop
     def _push(self, when: float, fn: Callable, *args) -> None:
@@ -145,6 +197,13 @@ class Simulator:
             self.records[i] = TaskRecord(task=task, node="")
             self._push(t_arrive, self._on_task_at_source, task)
         self._push(cfg.heartbeat_ms, self._on_heartbeat)
+        for ev in cfg.churn:
+            if ev.node == self.source:
+                raise ValueError("churn on the source node is not modeled "
+                                 "(tasks originate there)")
+            if ev.node not in self.nodes:
+                raise ValueError(f"churn on unknown node {ev.node!r}")
+            self._push(ev.at_ms, self._on_churn, ev)
 
         horizon = cfg.num_tasks * cfg.interval_ms + 100 * cfg.constraint_ms + 1e7
         while self._events:
@@ -159,14 +218,71 @@ class Simulator:
     # ------------------------------------------------------------ telemetry
     def _on_heartbeat(self, now: float) -> None:
         for n, node in self.nodes.items():
-            self._hb_views[n] = node.exact_state(now)
+            # dead/partitioned nodes publish nothing: their last view
+            # freezes in the table (exactly the real UP/MP behavior) and
+            # routing keeps trusting it until detection catches up
+            if node.alive and not node.partitioned:
+                self._hb_views[n] = node.exact_state(now)
         if self._n_done < self.cfg.num_tasks:
             self._push(now + self.cfg.heartbeat_ms, self._on_heartbeat)
+
+    # ---------------------------------------------------------------- churn
+    def _on_churn(self, now: float, ev: ChurnEvent) -> None:
+        node = self.nodes[ev.node]
+        if ev.kind == "kill":
+            node.alive = False
+            node.incarnation += 1       # in-flight finishes become stale
+            victims = list(node.active.values()) + \
+                [t for _, _, t, _ in node.waiting]
+            node.active.clear()
+            node.waiting.clear()
+            node.running = 0
+            self._push(now + self.cfg.detect_ms, self._detect_down, ev.node)
+            # the node's work is only KNOWN lost after the detection window
+            for t in victims:
+                self._push(now + self.cfg.detect_ms, self._retry, t)
+        elif ev.kind == "rejoin":
+            node.alive = True
+            node.partitioned = False
+            node.running = 0
+            node.active.clear()
+            node.waiting.clear()
+            self._presumed_dead.discard(ev.node)
+            self._hb_views[ev.node] = node.exact_state(now)
+        elif ev.kind == "partition":
+            node.partitioned = True     # keeps computing; nothing in or out
+            self._push(now + self.cfg.detect_ms, self._detect_down, ev.node)
+        elif ev.kind == "heal":
+            node.partitioned = False
+            self._presumed_dead.discard(ev.node)
+            self._hb_views[ev.node] = node.exact_state(now)
+
+    def _detect_down(self, now: float, name: str) -> None:
+        node = self.nodes[name]
+        if not node.alive or node.partitioned:      # still down when the
+            self._presumed_dead.add(name)           # alarm window elapses
+
+    def _retry(self, now: float, task: Task) -> None:
+        """Failover re-entry: the task's placement died (or its result was
+        unreachable); re-run the source decision — deadline-aware and
+        bounded, like ServingFleet.submit's retry loop."""
+        rec = self.records[task.task_id]
+        if rec.finished_ms < float("inf") or rec.lost:
+            return                      # first completion already won
+        slack = task.created_ms + task.constraint_ms - now
+        if rec.attempts >= self.cfg.retry_max or slack <= 0:
+            rec.lost = True             # visible terminal failure
+            self._n_done += 1
+            return
+        rec.attempts += 1
+        self._on_task_at_source(now, task)
 
     # ------------------------------------------------------------- decisions
     def _on_task_at_source(self, now: float, task: Task) -> None:
         src = self.nodes[self.source]
         decision = self.policy.decide_source(task, now, src.view(src.exact_state(now)))
+        if decision == FORWARD and self.coordinator in self._presumed_dead:
+            decision = LOCAL            # known-down coordinator: degrade
         if decision == LOCAL:
             self._enqueue(now, self.source, task)
         else:
@@ -175,8 +291,15 @@ class Simulator:
 
     def _on_task_at_coordinator(self, now: float, task: Task) -> None:
         coord = self.nodes[self.coordinator]
+        if not coord.alive or coord.partitioned:
+            # arrived at a dead/unreachable coordinator: the source learns
+            # one detection window later and re-routes
+            self._push(now + self.cfg.detect_ms, self._retry, task)
+            return
         peers = {n: self.nodes[n].view(self._hb_views[n])
-                 for n in self.nodes if n not in (self.coordinator, task.source)}
+                 for n in self.nodes
+                 if n not in (self.coordinator, task.source)
+                 and n not in self._presumed_dead}
         target = self.policy.decide_coordinator(
             task, now, coord.view(coord.exact_state(now)), peers)
         if target == self.coordinator:
@@ -197,6 +320,11 @@ class Simulator:
     # ------------------------------------------------------------ execution
     def _enqueue(self, now: float, node_name: str, task: Task) -> None:
         node = self.nodes[node_name]
+        if not node.alive or node.partitioned:
+            # routed onto a node that died after the view was published:
+            # the task vanishes for one detection window, then retries
+            self._push(now + self.cfg.detect_ms, self._retry, task)
+            return
         self.records[task.task_id].node = node_name
         if node.free_slots > 0:
             self._start(now, node_name, task)
@@ -210,20 +338,38 @@ class Simulator:
     def _start(self, now: float, node_name: str, task: Task) -> None:
         node = self.nodes[node_name]
         node.running += 1
+        node.active[task.task_id] = task
         app = node.profile.app(task.app_id)
         proc = app.process_time(task.size_kb, node.running, node.cpu_load)
-        self._push(now + proc, self._finish, node_name, task)
+        self._push(now + proc, self._finish, node_name, task,
+                   node.incarnation)
 
-    def _finish(self, now: float, node_name: str, task: Task) -> None:
+    def _finish(self, now: float, node_name: str, task: Task,
+                inc: int = 0) -> None:
         node = self.nodes[node_name]
+        if inc != node.incarnation:
+            return      # finish from a killed incarnation: never happened
         node.running -= 1
-        self._n_done += 1
+        node.active.pop(task.task_id, None)
         rec = self.records[task.task_id]
-        if node_name == task.source:
-            rec.finished_ms = now
-        else:
-            # result returns to the source over the link (T_re)
-            rec.finished_ms = now + node.profile.link.transfer_time(task.result_kb)
+        # a partitioned node computes the result but cannot return it to a
+        # remote source; the source retries after the detection window
+        result_lost = node.partitioned and node_name != task.source
+        if rec.finished_ms == float("inf") and not rec.lost:
+            if result_lost:
+                self._push(now + self.cfg.detect_ms, self._retry, task)
+            else:
+                # first completion wins (a raced retry may finish later
+                # elsewhere — that finish hits the branch above and is
+                # dropped from accounting, though it did occupy its slot)
+                self._n_done += 1
+                rec.node = node_name
+                if node_name == task.source:
+                    rec.finished_ms = now
+                else:
+                    # result returns to the source over the link (T_re)
+                    rec.finished_ms = now + \
+                        node.profile.link.transfer_time(task.result_kb)
         # pull next waiting task (container goes back to the q queue)
         while node.waiting:
             _, _, nxt, enq = heapq.heappop(node.waiting)

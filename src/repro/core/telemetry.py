@@ -81,10 +81,18 @@ class UpdateProfilePublisher:
         self.state_fn = state_fn
         self.table = table
         self.period_ms = period_ms
+        # while True, publish_once is a no-op: the node looks silent to the
+        # MP table and trips its staleness alarm one alarm window later.
+        # This is the network-partition (and crashed-process) surface the
+        # fault injector (repro.ft.faults) flips — detection then runs the
+        # exact code path a real partition would exercise.
+        self.suppressed = False
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     def publish_once(self) -> None:
+        if self.suppressed:
+            return
         self.table.update(self.name, self.state_fn(), self.profile.copy())
 
     def start(self) -> None:

@@ -36,11 +36,23 @@ def plan_rescale(old: ParallelConfig, available_devices: int,
 
     Keeps tp if it still divides the device count (weights keep their TP
     layout => cheapest reshard); otherwise falls back to the largest
-    power-of-two tp <= old tp that fits."""
+    power-of-two tp <= old tp that fits, floored at ``min_tp`` (a model
+    that does not fit on fewer than min_tp chips must not be sharded
+    thinner, even if that leaves survivor devices idle).  Raises when no
+    plan can satisfy the floor on the surviving devices."""
     old_devices = old.dp * old.tp * old.pods
+    if available_devices < 1:
+        raise ValueError("no surviving devices to rescale onto")
+    if min_tp > available_devices:
+        raise ValueError(
+            f"min_tp={min_tp} exceeds the {available_devices} surviving "
+            "device(s): the model cannot be placed — restore capacity "
+            "instead of sharding below its memory floor")
     tp = old.tp
     while tp > min_tp and available_devices % tp:
         tp //= 2
+    # halving from an odd tp (e.g. 6 -> 3 -> 1) can tunnel past the floor
+    tp = max(tp, min_tp)
     dp = max(available_devices // tp, 1)
     return RescalePlan(old_devices, dp * tp, dp, tp, reason)
 

@@ -9,13 +9,16 @@ triggering an elastic rescale from the last checkpoint.
 """
 from __future__ import annotations
 
+import logging
 import math
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.telemetry import MaintainProfileTable
+
+log = logging.getLogger(__name__)
 
 
 @dataclass
@@ -77,6 +80,97 @@ class StragglerMonitor:
                 if st.ewma_ms > self.rel * median and zscore > self.z:
                     stragglers.append(name)
             return FleetHealth(sorted(stragglers), sorted(dead), median)
+
+
+class FleetMonitor:
+    """Serving-side liveness monitor: the detection half of failover.
+
+    Polls two independent signals every ``poll_ms``:
+
+      * **staleness** — ``table.stale_nodes()`` over the MP table, whose
+        alarm the owning fleet derives from its heartbeat period (a
+        crashed process and a partitioned node both stop publishing);
+      * **progress** — an optional ``stalled_fn`` returning replicas that
+        hold admitted work but have stopped advancing (a *hung* decode
+        executable's heartbeat thread keeps publishing, so staleness
+        alone would never catch it).
+
+    Each replica is declared dead **once** (``on_dead(name, reason)``,
+    invoked outside any monitor lock); a subsequent ``revive(name)`` —
+    e.g. the replica rejoining after a partition heals — re-arms
+    detection for that name.  ``check_once`` is exposed for deterministic
+    tests; ``start`` runs it on a daemon thread."""
+
+    def __init__(self, table: MaintainProfileTable,
+                 on_dead: Callable[[str, str], None],
+                 poll_ms: float = 20.0,
+                 stalled_fn: Optional[Callable[[], List[str]]] = None):
+        self.table = table
+        self.on_dead = on_dead
+        self.poll_ms = poll_ms
+        self.stalled_fn = stalled_fn
+        self.skew_factor = 5.0          # sweep-gap starvation guard (below)
+        self._last_sweep_ms: Optional[float] = None
+        self._declared: Set[str] = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def check_once(self, now_ms: Optional[float] = None) -> List[str]:
+        """One detection sweep; returns the names newly declared dead.
+
+        Starvation guard: when this sweep itself arrives far later than
+        scheduled (``skew_factor`` × ``poll_ms``), the *process* was
+        stalled — a GC pause, an XLA compile, CPU starvation — and every
+        liveness clock in it (heartbeat receipt times, progress clocks) is
+        suspect: the publishers were starved by the same pause that
+        delayed us.  Declaring deaths off a lying clock evicts healthy
+        replicas, so the sweep abstains and waits for one clean interval
+        (a genuinely dead node is still dead next sweep)."""
+        now = now_ms if now_ms is not None else time.monotonic() * 1e3
+        last = self._last_sweep_ms
+        self._last_sweep_ms = now
+        if last is not None and now - last > self.skew_factor * self.poll_ms:
+            log.debug("FleetMonitor: sweep arrived %.0fms late; abstaining",
+                      now - last - self.poll_ms)
+            return []
+        suspects: Dict[str, str] = {}
+        for n in self.table.stale_nodes(now_ms):
+            suspects.setdefault(n, "heartbeat silence past staleness alarm")
+        if self.stalled_fn is not None:
+            for n in self.stalled_fn():
+                suspects.setdefault(n, "decode progress stalled")
+        newly: List[str] = []
+        with self._lock:
+            for n in suspects:
+                if n not in self._declared:
+                    self._declared.add(n)
+                    newly.append(n)
+        for n in newly:                 # callback outside the lock: it may
+            self.on_dead(n, suspects[n])    # call back into revive()
+        return newly
+
+    def revive(self, name: str) -> None:
+        """Re-arm detection for ``name`` (rejoin after eviction)."""
+        with self._lock:
+            self._declared.discard(name)
+
+    def start(self) -> None:
+        def loop():
+            while not self._stop.wait(self.poll_ms / 1e3):
+                try:
+                    self.check_once()
+                except Exception:       # detection must outlive a bad sweep
+                    log.exception("FleetMonitor sweep failed")
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="fleet-monitor")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)
 
 
 @dataclass

@@ -16,6 +16,12 @@ try ``--arch mamba2-780m`` or ``--arch recurrentgemma-9b``):
 ``--prefill-chunk-tokens`` sets the per-step prefill budget ceiling and
 ``--step-slo-ms`` makes the budget adaptive to the live decode-step cadence
 (see docs/PREFILL.md).
+
+Chaos (docs/FAULTS.md): ``--chaos crash|hang|slow|partition`` injects that
+fault into the source replica partway through the run (``--chaos-at-ms``),
+and the summary reports failovers / lost requests alongside the SLO
+accounting — a live demonstration of detection, eviction, and
+deadline-aware retry.
 """
 from __future__ import annotations
 
@@ -84,12 +90,31 @@ def main():
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop decoding when this token id is emitted "
                          "(trimmed from the output; -1 = disabled)")
+    ap.add_argument("--chaos", default="",
+                    choices=["", "crash", "hang", "slow", "partition"],
+                    help="inject this fault into the source replica mid-run "
+                         "(docs/FAULTS.md); empty = no chaos")
+    ap.add_argument("--chaos-at-ms", type=float, default=500.0,
+                    help="when the injected fault fires, relative to the "
+                         "first request")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     fleet = build_fleet(cfg, args.policy, replicas=args.replicas,
                         prefill_chunk_tokens=args.prefill_chunk_tokens,
                         step_slo_ms=args.step_slo_ms)
+
+    inj = None
+    if args.chaos:
+        from repro.ft import faults
+        # the source replica is the one DDS loads up first — killing it is
+        # the demo worth watching (in-flight streams fail over to peers)
+        victim = "replica0"
+        ev = (faults.slow(args.chaos_at_ms, 4.0) if args.chaos == "slow"
+              else faults.FaultEvent(args.chaos_at_ms, args.chaos))
+        inj = faults.inject(fleet, victim, faults.FaultPlan([ev]))
+        print(f"chaos: {args.chaos} on {victim} at t+{args.chaos_at_ms:.0f}ms")
+        inj.arm()
 
     rng = np.random.default_rng(0)
     results: List = []
@@ -105,13 +130,22 @@ def main():
             futs.append(ex.submit(fleet.submit, req))
             time.sleep(args.interval_ms / 1e3)
         results = [f.result() for f in futs]
+    if inj is not None:
+        inj.stop()
 
-    met = sum(1 for r in results if r.latency_ms() <= args.deadline_ms)
+    met = sum(1 for r in results if r.met(args.deadline_ms))
+    failed = sum(1 for r in results if not r.ok)
+    failovers = sum(1 for r in results if r.failed_over)
     lats = sorted(r.latency_ms() for r in results)
     p50 = lats[len(lats) // 2]
     p99 = lats[min(int(len(lats) * 0.99), len(lats) - 1)]
     print(f"\npolicy={args.policy} requests={args.requests} met_SLO={met}"
           f" p50={p50:.0f}ms p99={p99:.0f}ms placements={fleet.stats}")
+    if args.chaos or failed or failovers:
+        print(f"chaos summary: failed={failed} failed_over={failovers} "
+              f"fleet_failovers={fleet.failovers} lost={fleet.lost} "
+              f"dead={fleet.dead}")
+    fleet.stop()
 
 
 if __name__ == "__main__":

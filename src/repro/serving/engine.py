@@ -60,6 +60,8 @@ the scheduler logic is identical (it only sees profiles + telemetry).
 from __future__ import annotations
 
 import contextlib
+import logging
+import random
 import threading
 import time
 from collections import deque
@@ -71,12 +73,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
-from repro.core.latency import NodeState, Task
+from repro.core.latency import NodeState, Task, predict_total_ms
 from repro.core.policies import LOCAL, NodeView, Policy
 from repro.core.profile import AppProfile, Curve, DeviceProfile, LinkProfile
 from repro.core.telemetry import MaintainProfileTable, UpdateProfilePublisher
+from repro.ft.monitor import FleetMonitor
 from repro.models import model as model_lib
 from repro.serving import sampling as sampling_lib
+
+log = logging.getLogger(__name__)
+
+
+class ReplicaFailure(RuntimeError):
+    """One replica attempt failed in a way the router may retry: the
+    request itself is fine, the placement was not.  ``partial`` carries
+    whatever tokens decoded before the failure (diagnostics only — a
+    greedy/seeded retry regenerates the identical stream from scratch, so
+    failover output never mixes two replicas' partial streams)."""
+
+    def __init__(self, replica: str, msg: str,
+                 partial: Optional[List[int]] = None):
+        super().__init__(msg)
+        self.replica = replica
+        self.partial = partial or []
+
+
+class ReplicaDead(ReplicaFailure):
+    """The replica was declared dead (crashed decode thread, partitioned
+    heartbeats, or a stalled executable) with this request in flight."""
+
+
+class ReplicaRefused(ReplicaFailure):
+    """The replica refused the request at submit time (draining/stopped) —
+    an accounted refusal, retry elsewhere after backoff."""
+
+
+class ReplicaLeak(RuntimeError):
+    """stop() could not join the decode thread: it is hung, not stopped."""
 
 
 @dataclass
@@ -110,24 +143,37 @@ class Request:
 
 @dataclass
 class RequestResult:
+    """Outcome of one ``ServingFleet.submit``.  Failure is explicit, never
+    silent: ``attempts`` counts placements tried (>1 means the request was
+    re-routed at least once), ``failed_over`` marks completion on a replica
+    other than the first placement, and ``error`` is set — with whatever
+    partial tokens were decoded — when every attempt was exhausted."""
+
     request_id: int
     tokens: np.ndarray
     finished_ms: float
     replica: str
     created_ms: float
+    attempts: int = 1
+    failed_over: bool = False
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
     def latency_ms(self) -> float:
         return self.finished_ms - self.created_ms
 
     def met(self, deadline_ms: float) -> bool:
-        return self.latency_ms() <= deadline_ms
+        return self.ok and self.latency_ms() <= deadline_ms
 
 
 class _Job:
     """One request's life inside the batched decoder."""
 
     __slots__ = ("req", "lane", "lane_cache", "consumed", "out", "remaining",
-                 "done", "key", "stops")
+                 "done", "key", "stops", "error")
 
     def __init__(self, req: Request):
         self.req = req
@@ -137,6 +183,7 @@ class _Job:
         self.out: List[int] = []
         self.remaining = req.max_new_tokens
         self.done = threading.Event()
+        self.error: Optional[ReplicaFailure] = None   # set before done on failure
         # per-lane PRNG root: sampled requests get a key derived only from
         # the request (never from batch state), split once per token
         self.key = (sampling_lib.make_lane_key(
@@ -257,6 +304,14 @@ class Replica:
         self._prefilling: deque = deque()       # _Job with a reserved lane
         self._lanes: List[Optional[_Job]] = [None] * slots
         self._shutdown = False
+        # graceful drain / eviction: False refuses new submissions (the
+        # caller re-routes via the fleet's retry path) without tearing down
+        # lanes that are still finishing
+        self._accepting = True
+        # liveness clock for the FleetMonitor: advanced by every decode
+        # step / prefill chunk, and reset on work arrival so an idle
+        # replica never reads as stalled the moment it gets a request
+        self._last_progress_ms = time.monotonic() * 1e3
 
         # warm the executables (cold start happens HERE, not on requests)
         self._prefill = jax.jit(
@@ -380,11 +435,16 @@ class Replica:
             raise ValueError(f"request {req.request_id}: empty prompt")
         job = _Job(req)
         with self._work:
-            if self._shutdown:
-                raise RuntimeError(f"replica {self.name} is stopped")
+            if self._shutdown or not self._accepting:
+                raise ReplicaRefused(
+                    self.name, f"replica {self.name} is "
+                    f"{'stopped' if self._shutdown else 'not accepting'}")
             self._pending.append(job)
+            self._last_progress_ms = time.monotonic() * 1e3
             self._work.notify()
         job.done.wait()
+        if job.error is not None:
+            raise job.error
         return np.asarray(job.out, np.int32)
 
     def generate_sequential(self, req: Request) -> np.ndarray:
@@ -406,11 +466,95 @@ class Replica:
                 pos += 1
             return np.asarray(out, np.int32)
 
-    def stop(self) -> None:
+    def stop(self, timeout_s: float = 5.0, raise_on_leak: bool = True) -> bool:
+        """Stop the decode thread and verify it actually exited.
+
+        Returns True on a clean exit.  A decode thread that fails to join
+        within ``timeout_s`` (hung executable, uninterruptible fault) is a
+        LEAK, not a stop: it is logged and — unless ``raise_on_leak`` is
+        False (monitor-thread use, where raising would kill detection) —
+        surfaced as ``ReplicaLeak`` so a hung replica can never be
+        silently "stopped"."""
         with self._work:
             self._shutdown = True
+            self._accepting = False
             self._work.notify_all()
-        self._thread.join(timeout=5.0)
+        self._thread.join(timeout=timeout_s)
+        if self._thread.is_alive():
+            msg = (f"replica {self.name}: decode thread failed to exit "
+                   f"within {timeout_s:.1f}s — leaked, not stopped")
+            log.error(msg)
+            if raise_on_leak:
+                raise ReplicaLeak(msg)
+            return False
+        return True
+
+    def quiesce(self) -> List[Request]:
+        """Stop accepting new requests and hand back the queued-but-not-
+        started ones so the fleet can re-route them (the drain half of
+        scale-in).  Jobs already prefilling or decoding keep their lanes —
+        their streams finish here.  Queued jobs are failed with a
+        retryable ``ReplicaRefused`` so their blocked callers re-enter the
+        fleet's retry path instead of waiting on a replica that will never
+        run them."""
+        with self._work:
+            self._accepting = False
+            migrated = list(self._pending)
+            self._pending.clear()
+        for j in migrated:
+            j.error = ReplicaRefused(
+                self.name, f"replica {self.name} draining", list(j.out))
+            j.done.set()
+        return [j.req for j in migrated]
+
+    def drain(self, timeout_s: float = 60.0) -> bool:
+        """Quiesce, then wait for every active lane (and in-progress
+        prefill) to finish.  Returns True when the replica emptied within
+        ``timeout_s`` — afterwards ``stop()`` cannot cut a live stream."""
+        self.quiesce()
+        deadline = time.monotonic() + timeout_s
+        with self._work:
+            while (any(j is not None for j in self._lanes)
+                   or self._prefilling):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._work.wait(min(remaining, 0.05))
+        return True
+
+    def fail_inflight(self, reason: str = "replica dead") -> List[Request]:
+        """Fail every in-flight job (queued, prefilling, decoding) with a
+        retryable ``ReplicaDead`` and stop accepting — the eviction path
+        the FleetMonitor runs when this replica is declared dead.  Blocked
+        ``generate`` callers raise instead of hanging forever on a decode
+        thread that will never set their event.  Returns the failed
+        requests (the fleet re-submits them through routing)."""
+        with self._work:
+            self._accepting = False
+            jobs = (list(self._pending) + list(self._prefilling)
+                    + [j for j in self._lanes if j is not None])
+            self._pending.clear()
+            self._prefilling.clear()
+            self._lanes = [None] * self.slots
+        for j in jobs:
+            j.error = ReplicaDead(
+                self.name, f"replica {self.name}: {reason}", list(j.out))
+            j.done.set()
+        return [j.req for j in jobs]
+
+    def stalled_ms(self, now_ms: Optional[float] = None) -> float:
+        """Milliseconds since the decode loop last made progress while
+        holding admitted work (0.0 when idle).  A crashed or hung decode
+        thread keeps ``running`` lanes but stops advancing this clock —
+        the progress signal the FleetMonitor reads, since a hung
+        executable's heartbeat thread keeps publishing happily."""
+        now = now_ms if now_ms is not None else time.monotonic() * 1e3
+        with self._lock:
+            busy = (any(j is not None for j in self._lanes)
+                    or bool(self._prefilling) or bool(self._pending))
+            if not busy:
+                return 0.0
+            return now - self._last_progress_ms
 
     # ---------------------------------------------------- decode loop (thread)
     def _loop(self) -> None:
@@ -443,11 +587,14 @@ class Replica:
                         self._prefilling.append(job)
                 active = [i for i, j in enumerate(self._lanes)
                           if j is not None]
+                # snapshot the prefill head under the lock: fail_inflight
+                # may clear the deque from the monitor thread at any time
+                head = self._prefilling[0] if self._prefilling else None
 
             # one prefill chunk for the oldest admitted prompt — budgeted
             # work, so in-flight decodes stall at most the SLO slack
-            if self._prefilling:
-                self._advance_prefill(self._prefilling[0], len(active))
+            if head is not None:
+                self._advance_prefill(head, len(active))
 
             if active:
                 self._decode_step(active)
@@ -511,6 +658,7 @@ class Replica:
                 prof.observe_prefill_chunk((time.perf_counter() - t0) * 1e3,
                                            tokens=w)
             job.consumed += w
+        self._last_progress_ms = time.monotonic() * 1e3
         if job.consumed < n:
             return
         # prompt fully prefilled: splice the lane in and emit token 0 —
@@ -546,7 +694,12 @@ class Replica:
             self._topp[lane] = 1.0
         finished = False
         with self._work:
-            self._prefilling.popleft()
+            if self._prefilling and self._prefilling[0] is job:
+                self._prefilling.popleft()
+            self._work.notify_all()         # wake drain() waiters
+            if job.error is not None:
+                return                      # failed/evicted mid-prefill:
+                                            # never install a dead job
             if job.remaining > 0:
                 job.out.append(first)
                 job.remaining -= 1
@@ -588,6 +741,7 @@ class Replica:
                                           jnp.asarray(self._tok),
                                           jnp.asarray(self._idx))
         nxt_np = np.asarray(nxt)        # the one (slots,) transfer per step
+        self._last_progress_ms = time.monotonic() * 1e3
         prof = self.profile             # Update-Profile: live step telemetry
         if prof is not None:
             prof.observe_step(len(active), (time.perf_counter() - t0) * 1e3)
@@ -612,6 +766,8 @@ class Replica:
                     self._topk[lane] = 0
                     self._topp[lane] = 1.0
                     finished.append(job)
+            if finished:
+                self._work.notify_all()     # wake drain() waiters
         for job in finished:
             job.done.set()
 
@@ -752,20 +908,62 @@ class ServingFleet:
     untouched and bind to whichever replica lane the request lands on.
     Replicas may be single-chip or sharded (``Replica(serving_mesh=...)``)
     — the router only ever sees their lane-mode profiles and occupancy
-    telemetry, so both kinds mix in one fleet."""
+    telemetry, so both kinds mix in one fleet.
+
+    **Failure handling** (the paper's "dynamically varying environment"):
+    a ``FleetMonitor`` polls the MP table's staleness alarm — derived
+    from ``heartbeat_ms`` (``staleness_factor`` heartbeats), never the
+    1000 ms training default — plus each replica's decode-progress clock
+    (a hung executable heartbeats happily).  A replica declared dead is
+    evicted from routing and its in-flight requests are failed with a
+    retryable error; their blocked ``submit`` callers then re-route —
+    re-prefilling from scratch, so greedy/seeded streams stay
+    token-identical — but only while a surviving replica's predicted
+    ``T_task`` (queue + process) still fits the remaining deadline slack,
+    with at most ``max_attempts`` placements and jittered backoff between
+    them.  Requests that exhaust retries return a ``RequestResult`` with
+    ``error`` set and are counted in ``lost`` — visible, never silent.
+    ``remove_replica`` drains by default: the replica stops accepting,
+    active lanes finish their streams, queued requests re-route."""
 
     def __init__(self, policy: Policy, source: str, coordinator: str,
-                 heartbeat_ms: float = 20.0):
+                 heartbeat_ms: float = 20.0, staleness_factor: float = 25.0,
+                 progress_timeout_ms: float = 5_000.0, max_attempts: int = 3,
+                 retry_backoff_ms: float = 20.0, monitor: bool = True,
+                 seed: int = 0):
         self.policy = policy
         self.source = source
         self.coordinator = coordinator
         self.heartbeat_ms = heartbeat_ms
+        # the staleness alarm is a MULTIPLE of the configured heartbeat —
+        # wiring the table's 1000 ms default under a 20 ms heartbeat made
+        # the alarm 50 periods wide for one fleet and 1 period for another
+        if staleness_factor < 2.0:
+            raise ValueError(
+                f"staleness_factor={staleness_factor} < 2: a single missed "
+                "heartbeat would declare the replica dead")
+        self.staleness_alarm_ms = staleness_factor * heartbeat_ms
+        self.progress_timeout_ms = progress_timeout_ms
+        self.max_attempts = max(int(max_attempts), 1)
+        self.retry_backoff_ms = retry_backoff_ms
         self.replicas: Dict[str, Replica] = {}
         self.profiles: Dict[str, DeviceProfile] = {}
-        self.table = MaintainProfileTable()
+        self.table = MaintainProfileTable(
+            staleness_alarm_ms=self.staleness_alarm_ms)
+        assert self.table.staleness_alarm_ms >= 2 * heartbeat_ms
         self._publishers: Dict[str, UpdateProfilePublisher] = {}
         self.stats: Dict[str, int] = {}
+        self.failovers = 0               # requests re-routed off a dead replica
+        self.lost = 0                    # requests reported failed (visible!)
+        self.dead: List[str] = []        # replicas the monitor evicted
+        self._rng = random.Random(seed)  # retry-backoff jitter
         self._lock = threading.Lock()    # guards membership dicts + stats
+        self.monitor: Optional[FleetMonitor] = None
+        if monitor:
+            self.monitor = FleetMonitor(
+                self.table, on_dead=self._on_replica_dead,
+                poll_ms=heartbeat_ms, stalled_fn=self._stalled_replicas)
+            self.monitor.start()
 
     def add_replica(self, rep: Replica, profile: Optional[AppProfile] = None,
                     link: Optional[LinkProfile] = None) -> None:
@@ -780,9 +978,17 @@ class ServingFleet:
             self.replicas[rep.name] = rep
             self.profiles[rep.name] = dev
             self._publishers[rep.name] = pub
+        if self.monitor is not None:
+            self.monitor.revive(rep.name)   # a rejoin clears prior death
         pub.start()
 
-    def remove_replica(self, name: str) -> None:
+    def remove_replica(self, name: str, drain: bool = True) -> None:
+        """Scale a replica out.  With ``drain`` (the default) this is
+        graceful: the replica stops accepting, queued requests are failed
+        retryable (their blocked callers re-route through ``submit``'s
+        retry loop), active lanes finish their streams, and only then does
+        the decode thread stop — no dropped streams on scale-in.  With
+        ``drain=False`` it is an immediate teardown (fleet shutdown)."""
         with self._lock:
             pub = self._publishers.pop(name, None)
             self.profiles.pop(name, None)
@@ -791,13 +997,54 @@ class ServingFleet:
             pub.stop()
         self.table.remove(name)
         if rep:
+            if drain and not rep.drain():
+                log.warning("replica %s: drain timed out; stopping with "
+                            "lanes still active", name)
             rep.stop()
 
     def stop(self) -> None:
+        if self.monitor is not None:
+            self.monitor.stop()
         with self._lock:
             names = list(self.replicas)
         for name in names:
-            self.remove_replica(name)
+            self.remove_replica(name, drain=False)
+
+    # ------------------------------------------------------ failure handling
+    def _stalled_replicas(self) -> List[str]:
+        """Replicas whose decode loop holds work but has not advanced for
+        ``progress_timeout_ms`` — the hang detector (a hung executable's
+        heartbeat thread keeps publishing, so staleness alone misses it)."""
+        if self.progress_timeout_ms <= 0:
+            return []
+        with self._lock:
+            reps = dict(self.replicas)
+        return [n for n, r in reps.items()
+                if r.stalled_ms() > self.progress_timeout_ms]
+
+    def _on_replica_dead(self, name: str, reason: str) -> None:
+        """Monitor callback: evict ``name`` from routing and fail its
+        in-flight requests retryable.  Ordering matters — fail_inflight
+        BEFORE stop(): the decode loop's shutdown path releases stranded
+        jobs with partial tokens and *no* error, which would silently
+        truncate streams instead of re-routing them."""
+        with self._lock:
+            pub = self._publishers.pop(name, None)
+            self.profiles.pop(name, None)
+            rep = self.replicas.pop(name, None)
+            if rep is not None:
+                self.dead.append(name)
+        if pub:
+            pub.stop()
+        self.table.remove(name)
+        if rep is None:
+            return                      # already removed (drain raced death)
+        failed = rep.fail_inflight(reason)
+        # best-effort teardown: never raise in the monitor thread (a hung
+        # decode thread is exactly what got us here)
+        rep.stop(timeout_s=1.0, raise_on_leak=False)
+        log.warning("replica %s declared dead (%s); %d in-flight request(s) "
+                    "re-routed", name, reason, len(failed))
 
     def _members(self) -> Dict[str, Replica]:
         """Membership snapshot — routing must never iterate or index the
@@ -826,36 +1073,118 @@ class ServingFleet:
         members = self._members()
         return self._route(req, members)
 
-    def _route(self, req: Request, members: Dict[str, Replica]) -> str:
+    def _route(self, req: Request, members: Dict[str, Replica],
+               avoid: Optional[str] = None) -> str:
+        """Two-level placement over the surviving membership.  ``avoid``
+        biases a retry away from the replica that just failed the request
+        (it may already be evicted; if it is the only survivor, it is
+        still used).  When the named source/coordinator replica has died,
+        routing promotes a survivor instead of refusing — churn must not
+        take down the whole fleet because a *special* replica died."""
+        if avoid is not None and len(members) > 1:
+            members = {n: r for n, r in members.items() if n != avoid}
+        if not members:
+            raise ReplicaRefused("-", "no live replicas in the fleet")
         now = time.monotonic() * 1e3
         task = Task(task_id=req.request_id, app_id="serve",
                     size_kb=float(len(req.prompt)), created_ms=req.created_ms
                     or now, constraint_ms=req.deadline_ms, source=self.source)
         source = members.get(self.source)
         coordinator = members.get(self.coordinator)
-        if source is None or coordinator is None:
-            raise RuntimeError(
-                f"fleet has no {'source' if source is None else 'coordinator'}"
-                f" replica ({self.source if source is None else self.coordinator}"
-                " was removed)")
-        if self.policy.decide_source(
+        if coordinator is None:     # promote: source, else any survivor
+            cname = self.source if source is not None \
+                else sorted(members)[0]
+            coordinator = members[cname]
+        else:
+            cname = self.coordinator
+        if source is not None and self.policy.decide_source(
                 task, now, self._view(self.source, source, exact=True)) == LOCAL:
             return self.source
         peers = {n: self._view(n, r) for n, r in members.items()
-                 if n not in (self.coordinator, self.source)}
+                 if n not in (cname, self.source)}
         return self.policy.decide_coordinator(
-            task, now, self._view(self.coordinator, coordinator, exact=True),
-            peers)
+            task, now, self._view(cname, coordinator, exact=True), peers)
+
+    def _retry_viable(self, req: Request, members: Dict[str, Replica]) -> bool:
+        """Deadline-aware retry gate: re-route only when some survivor's
+        predicted T_task still fits the remaining SLO slack (the paper's
+        predictor, same as placement — retrying a request that cannot make
+        its deadline anywhere just burns a lane a live request needs)."""
+        now = time.monotonic() * 1e3
+        slack = req.deadline_ms - (now - req.created_ms)
+        if slack <= 0:
+            return False
+        task = Task(task_id=req.request_id, app_id="serve",
+                    size_kb=float(len(req.prompt)), created_ms=req.created_ms,
+                    constraint_ms=req.deadline_ms, source=self.source)
+        for name in members:
+            prof = self.profiles.get(name)
+            if prof is None or "serve" not in prof.apps:
+                continue
+            view = self._view(name, members[name])
+            t = predict_total_ms(view.profile, task, view.state,
+                                 remote=(name != self.source))
+            if t <= slack:
+                return True
+        return False
+
+    def _backoff_s(self, attempt: int) -> float:
+        """Jittered exponential backoff before retry ``attempt`` (1-based):
+        refused submits must not re-slam the surviving replicas in
+        lockstep."""
+        base = self.retry_backoff_ms * (2.0 ** (attempt - 1))
+        return base * (0.5 + 0.5 * self._rng.random()) / 1e3
 
     def submit(self, req: Request) -> RequestResult:
+        """Route, generate, and — on replica death or refusal — retry on a
+        survivor while the deadline still allows, up to ``max_attempts``
+        placements.  Greedy and seeded-sampled decodes are deterministic
+        functions of the request, so a failover retry regenerates the
+        token-identical stream from scratch; partial tokens from the dead
+        replica are never stitched.  Exhausted requests return an error
+        result (``ok=False``, partial tokens attached) and count in
+        ``lost`` — the failure mode is visible, never a hang or a silently
+        truncated stream."""
         req.created_ms = req.created_ms or time.monotonic() * 1e3
-        members = self._members()
-        name = self._route(req, members)
+        attempts = 0
+        first_name: Optional[str] = None
+        last_err: Optional[ReplicaFailure] = None
+        while attempts < self.max_attempts:
+            attempts += 1
+            members = self._members()
+            avoid = last_err.replica if last_err is not None else None
+            try:
+                name = self._route(req, members, avoid=avoid)
+            except ReplicaRefused as e:
+                last_err = e
+                break                   # no live replicas: nothing to wait for
+            first_name = first_name or name
+            with self._lock:
+                self.stats[name] = self.stats.get(name, 0) + 1
+                if attempts > 1:
+                    self.failovers += 1
+            try:
+                toks = members[name].generate(req)
+                return RequestResult(
+                    req.request_id, toks, time.monotonic() * 1e3, name,
+                    req.created_ms, attempts=attempts,
+                    failed_over=(name != first_name))
+            except ReplicaFailure as e:
+                last_err = e
+                log.info("request %d attempt %d on %s failed: %s",
+                         req.request_id, attempts, name, e)
+                if attempts >= self.max_attempts:
+                    break
+                time.sleep(self._backoff_s(attempts))
+                if not self._retry_viable(req, self._members()):
+                    log.info("request %d: no survivor fits remaining "
+                             "deadline slack; giving up", req.request_id)
+                    break
         with self._lock:
-            self.stats[name] = self.stats.get(name, 0) + 1
-        # a replica removed between route and generate raises the replica's
-        # explicit "stopped" RuntimeError — an accounted refusal, not a
-        # random KeyError from a mutating dict
-        toks = members[name].generate(req)
-        return RequestResult(req.request_id, toks, time.monotonic() * 1e3,
-                             name, req.created_ms)
+            self.lost += 1
+        partial = np.asarray(last_err.partial if last_err else [], np.int32)
+        return RequestResult(
+            req.request_id, partial, time.monotonic() * 1e3,
+            last_err.replica if last_err else "-", req.created_ms,
+            attempts=attempts, failed_over=False,
+            error=str(last_err) if last_err else "no attempt succeeded")

@@ -114,6 +114,44 @@ def test_plan_rescale_keeps_tp_when_divisible():
     assert 24 % plan2.new_tp == 0
 
 
+def test_plan_rescale_non_power_of_two_survivors():
+    """tp falls back to the largest power-of-two divisor of an awkward
+    survivor count; leftover devices may idle but the plan must fit."""
+    plan = plan_rescale(ParallelConfig(dp=2, tp=4), available_devices=6)
+    assert (plan.new_dp, plan.new_tp) == (3, 2) and plan.shrink
+    assert plan.new_devices == 6
+
+
+def test_plan_rescale_min_tp_floor_holds():
+    """Halving from an odd tp (6 -> 3 -> 1) used to tunnel straight past
+    the floor; the plan must never shard thinner than min_tp."""
+    plan = plan_rescale(ParallelConfig(dp=2, tp=6), available_devices=8,
+                        min_tp=2)
+    assert plan.new_tp == 2 and plan.new_devices <= 8
+
+
+def test_plan_rescale_shrink_to_one_device():
+    plan = plan_rescale(ParallelConfig(dp=2, tp=4), available_devices=1)
+    assert (plan.new_dp, plan.new_tp, plan.new_devices) == (1, 1, 1)
+    assert plan.shrink
+
+
+def test_plan_rescale_tp_no_longer_divides_fallback():
+    # 12 % 8 != 0 -> halve to 4, which divides: dp picks up the slack
+    plan = plan_rescale(ParallelConfig(dp=1, tp=8), available_devices=12)
+    assert (plan.new_tp, plan.new_dp) == (4, 3)
+
+
+def test_plan_rescale_infeasible_floor_raises():
+    """min_tp above the surviving device count cannot be planned around —
+    surfacing it beats silently emitting a plan needing ghost devices."""
+    with pytest.raises(ValueError):
+        plan_rescale(ParallelConfig(dp=1, tp=4), available_devices=2,
+                     min_tp=4)
+    with pytest.raises(ValueError):
+        plan_rescale(ParallelConfig(dp=1, tp=1), available_devices=0)
+
+
 def test_certification_rejects_bad_device():
     prof = paper_raspberry_pi("badpi", slots=0)
     ok, why = certify(prof, [FACE], min_slots=1)

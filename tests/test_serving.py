@@ -59,8 +59,15 @@ def test_fleet_routes_and_accounts(small_setup):
     res = fleet.submit(Request(2, np.arange(2, 8, dtype=np.int32),
                                max_new_tokens=2, deadline_ms=1e9))
     assert res.replica == "replica0"
+    assert res.ok and res.attempts == 1 and not res.failed_over
     assert len(res.tokens) == 2
     assert fleet.stats["replica0"] >= 1
+    # detach without stopping the module-shared replica: the leaked
+    # monitor/publishers would otherwise keep watching replica0 and could
+    # evict it when later tests' compile storms starve the heartbeat thread
+    fleet.monitor.stop()
+    for pub in fleet._publishers.values():
+        pub.stop()
 
 
 def _reference_tokens(params, cfg, prompt, max_new, capacity=64):
