@@ -10,6 +10,7 @@ idle-node processing plus (for remote nodes) transfer both ways.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Tuple
 
 from repro.core.latency import NodeState, Task, predict_total_ms
@@ -29,6 +30,12 @@ def min_feasible_ms(fleet: Dict[str, DeviceProfile], task: Task,
 def admit(fleet: Dict[str, DeviceProfile], task: Task, source: str,
           margin: float = 1.0) -> Tuple[bool, float]:
     """Returns (admitted, floor_ms).  ``margin`` scales the floor (e.g. 1.2
-    keeps 20% headroom for queueing/staleness)."""
+    keeps 20% headroom for queueing/staleness).
+
+    An empty (or profile-less) fleet has no floor to measure: admit and
+    let routing report the membership problem — admission only rejects
+    tasks *proven* infeasible."""
     floor = min_feasible_ms(fleet, task, source)
+    if not math.isfinite(floor):
+        return True, floor
     return task.constraint_ms >= floor * margin, floor

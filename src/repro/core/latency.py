@@ -33,8 +33,13 @@ class NodeState:
 
     running: int = 0               # tasks currently executing in warm slots
     queued: int = 0                # tasks waiting for a slot
+    reserved: int = 0              # slots held but not yet running (a
+                                   # serving replica's mid-prefill lanes):
+                                   # capacity-wise they are taken, queue-wise
+                                   # they still owe interleave work
     cpu_load: float = 0.0          # background load [0, 1]
     updated_ms: float = 0.0        # telemetry timestamp
+    brownout: bool = False         # node is degrading service under overload
 
 
 def predict_process_ms(profile: DeviceProfile, task: Task,
@@ -47,7 +52,7 @@ def predict_process_ms(profile: DeviceProfile, task: Task,
     of sharing the batch — instead of a full process-per-slot contended
     runtime (``AppProfile.process_time`` branches on ``lane_mode``)."""
     app = profile.app(task.app_id)
-    conc = min(state.running + extra, profile.slots)
+    conc = min(state.running + state.reserved + extra, profile.slots)
     return app.process_time(task.size_kb, conc, state.cpu_load)
 
 
@@ -65,7 +70,7 @@ def predict_queue_ms(profile: DeviceProfile, task: Task,
     budget spends against, so predictor and budget stay one model (the
     incoming task's size stands in for the unknown queued-prompt
     sizes)."""
-    if state.queued <= 0:
+    if state.queued <= 0 and state.reserved <= 0:
         return 0.0
     app = profile.app(task.app_id)
     waves = state.queued / max(profile.slots, 1)
@@ -73,8 +78,12 @@ def predict_queue_ms(profile: DeviceProfile, task: Task,
         per_task = app.tokens_per_task * app.step_curve(float(profile.slots))
         if state.cpu_load > 0.0 and app.load_curve is not None:
             per_task *= app.load_curve(state.cpu_load) / app.load_curve(0.0)
+        # reserved (mid-prefill) lanes are not waiting for a slot, but
+        # their remaining prefill chunks still interleave ahead of a
+        # joining prompt's — charge them the interleave term only
         return (waves * per_task
-                + state.queued * app.interleave_ms(max(task.size_kb, 1.0)))
+                + (state.queued + state.reserved)
+                * app.interleave_ms(max(task.size_kb, 1.0)))
     per_task = app.process_time(task.size_kb, min(profile.slots, max(
         state.running, 1)), state.cpu_load)
     return waves * per_task

@@ -172,9 +172,10 @@ class JSQ(Policy):
 
     def decide_coordinator(self, task, now, coord, peers):
         best = coord.profile.device_id
-        best_q = coord.state.queued + coord.state.running
+        best_q = (coord.state.queued + coord.state.running
+                  + coord.state.reserved)
         for name, view in peers.items():
-            q = view.state.queued + view.state.running
+            q = view.state.queued + view.state.running + view.state.reserved
             if q < best_q:
                 best, best_q = name, q
         return best

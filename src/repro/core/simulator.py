@@ -32,6 +32,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.admission import admit
 from repro.core.latency import NodeState, Task
 from repro.core.policies import FORWARD, LOCAL, NodeView, Policy
 from repro.core.profile import (FACE, DeviceProfile, paper_edge_server,
@@ -73,6 +74,12 @@ class SimConfig:
     churn: Tuple[ChurnEvent, ...] = ()
     detect_ms: float = 100.0        # staleness-alarm window (death -> known)
     retry_max: int = 3              # placements per task, first included
+    # overload control (mirrors ServingFleet/Replica): a feasibility-floor
+    # admission gate at the source (> 0 enables; margin scales the floor)
+    # and a bounded per-node waiting queue (> 0 enables; a full queue
+    # sheds in queue order — the worst-keyed task, arrival included)
+    admission_margin: float = 0.0
+    max_queue: int = 0
 
 
 @dataclass
@@ -84,6 +91,13 @@ class TaskRecord:
     attempts: int = 1               # placements tried (>1: failed over)
     lost: bool = False              # terminally failed: retries exhausted
                                     # or no deadline slack left to retry in
+    rejected: bool = False          # admission: deadline below the floor
+    shed: bool = False              # overload: evicted from a full queue
+    infeasible: bool = False        # lost with zero slack remaining — no
+                                    # scheduler could have met it (churn ate
+                                    # the deadline); kept distinct so hit
+                                    # rates read scheduling quality, not
+                                    # physics
 
     @property
     def latency_ms(self) -> float:
@@ -111,6 +125,37 @@ class SimResult:
     @property
     def num_failed_over(self) -> int:
         return sum(1 for r in self.records if r.attempts > 1)
+
+    @property
+    def num_rejected(self) -> int:
+        return sum(1 for r in self.records if r.rejected)
+
+    @property
+    def num_shed(self) -> int:
+        return sum(1 for r in self.records if r.shed)
+
+    @property
+    def num_dropped(self) -> int:
+        return sum(1 for r in self.records if r.dropped)
+
+    @property
+    def num_infeasible(self) -> int:
+        return sum(1 for r in self.records if r.infeasible)
+
+    @property
+    def num_admitted(self) -> int:
+        return len(self.records) - self.num_rejected
+
+    @property
+    def hit_rate(self) -> float:
+        """Deadline hits over tasks the scheduler was actually accountable
+        for: admitted, and not rendered infeasible by churn (a task whose
+        slack was consumed by a detection window no policy controls).
+        ``num_met / num_tasks`` conflated those with scheduling misses and
+        made churn hit-rates unreadable; the raw ratio stays available as
+        ``num_met / len(records)``."""
+        denom = self.num_admitted - self.num_infeasible
+        return self.num_met / max(denom, 1)
 
     @property
     def latencies(self) -> List[float]:
@@ -272,13 +317,35 @@ class Simulator:
         slack = task.created_ms + task.constraint_ms - now
         if rec.attempts >= self.cfg.retry_max or slack <= 0:
             rec.lost = True             # visible terminal failure
+            # zero slack means churn consumed the whole deadline budget —
+            # no placement could have met this task; flag it so hit-rate
+            # accounting separates physics from scheduling
+            rec.infeasible = slack <= 0
             self._n_done += 1
             return
         rec.attempts += 1
         self._on_task_at_source(now, task)
 
+    def _live_profiles(self) -> Dict[str, DeviceProfile]:
+        """The source's view of routable capacity for admission: every node
+        not known dead (a not-yet-detected death still counts — admission
+        shares routing's staleness tolerance)."""
+        return {n: node.profile for n, node in self.nodes.items()
+                if n not in self._presumed_dead}
+
     # ------------------------------------------------------------- decisions
     def _on_task_at_source(self, now: float, task: Task) -> None:
+        rec = self.records[task.task_id]
+        if self.cfg.admission_margin > 0 and rec.attempts == 1:
+            # feasibility-floor admission at first submission only (a
+            # retry already sunk transfer/queue time; re-litigating its
+            # deadline here would double-charge it)
+            ok, _ = admit(self._live_profiles(), task, self.source,
+                          self.cfg.admission_margin)
+            if not ok:
+                rec.rejected = True
+                self._n_done += 1
+                return
         src = self.nodes[self.source]
         decision = self.policy.decide_source(task, now, src.view(src.exact_state(now)))
         if decision == FORWARD and self.coordinator in self._presumed_dead:
@@ -328,12 +395,25 @@ class Simulator:
         self.records[task.task_id].node = node_name
         if node.free_slots > 0:
             self._start(now, node_name, task)
+            return
+        if self.policy.queue_discipline == "edf":
+            key = task.created_ms + task.constraint_ms   # abs deadline
         else:
-            if self.policy.queue_discipline == "edf":
-                key = task.created_ms + task.constraint_ms   # abs deadline
-            else:
-                key = now                                    # FIFO arrival
-            heapq.heappush(node.waiting, (key, next(self._seq), task, now))
+            key = now                                    # FIFO arrival
+        if self.cfg.max_queue > 0 and len(node.waiting) >= self.cfg.max_queue:
+            # bounded queue: resolve in key order — shed the worst of
+            # (queued tasks, arrival), mirroring the serving replica's
+            # ReplicaSaturated eviction
+            worst = max(node.waiting)
+            if worst[0] <= key:
+                self.records[task.task_id].shed = True
+                self._n_done += 1
+                return
+            node.waiting.remove(worst)
+            heapq.heapify(node.waiting)
+            self.records[worst[2].task_id].shed = True
+            self._n_done += 1
+        heapq.heappush(node.waiting, (key, next(self._seq), task, now))
 
     def _start(self, now: float, node_name: str, task: Task) -> None:
         node = self.nodes[node_name]

@@ -61,6 +61,14 @@ class MaintainProfileTable:
             return [n for n, r in self._table.items()
                     if now_ms - r.received_at > self.staleness_alarm_ms]
 
+    def degraded_nodes(self) -> List[str]:
+        """Nodes whose last heartbeat advertised brownout degradation —
+        still alive and routable, but serving clamped responses under
+        overload (the honest-telemetry counterpart of ``stale_nodes``)."""
+        with self._lock:
+            return sorted(n for n, r in self._table.items()
+                          if getattr(r.state, "brownout", False))
+
 
 class UpdateProfilePublisher:
     """Node-side periodic state publisher (UP).  ``state_fn`` samples the

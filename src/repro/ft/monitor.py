@@ -155,6 +155,14 @@ class FleetMonitor:
         with self._lock:
             self._declared.discard(name)
 
+    def degraded_nodes(self) -> List[str]:
+        """Replicas advertising brownout in their latest heartbeat — a
+        health dimension between fine and dead: alive, routable, but
+        degrading service under overload.  Surfaced here so operators
+        watching the monitor see overload where they already look for
+        stragglers and deaths."""
+        return self.table.degraded_nodes()
+
     def start(self) -> None:
         def loop():
             while not self._stop.wait(self.poll_ms / 1e3):

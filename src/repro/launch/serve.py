@@ -22,6 +22,13 @@ fault into the source replica partway through the run (``--chaos-at-ms``),
 and the summary reports failovers / lost requests alongside the SLO
 accounting — a live demonstration of detection, eviction, and
 deadline-aware retry.
+
+Overload control (docs/SERVING.md): ``--priority interactive|batch`` tags
+every request's shedding class, ``--admission-margin`` scales the
+feasibility floor the fleet refuses infeasible deadlines against (0
+disables admission), and ``--brownout`` arms queue-pressure brownout on
+each replica.  The summary then accounts every request by outcome:
+ok / rejected / shed / lost.
 """
 from __future__ import annotations
 
@@ -37,21 +44,26 @@ from repro.configs import get_config, get_smoke_config
 from repro.core.policies import make_policy
 from repro.models import model as model_lib
 from repro.serving.engine import Replica, Request, ServingFleet
+from repro.serving.overload import PRIORITIES, BrownoutConfig
 
 
 def build_fleet(cfg, policy_name: str, replicas: int = 2,
                 slots: int = 2, capacity: int = 128,
                 prefill_chunk_tokens: int = 32,
-                step_slo_ms: float = 0.0) -> ServingFleet:
+                step_slo_ms: float = 0.0,
+                admission_margin: float = 0.0,
+                brownout: bool = False) -> ServingFleet:
     key = jax.random.PRNGKey(0)
     params = model_lib.init_model(key, cfg)
     fleet = ServingFleet(make_policy(policy_name), source="replica0",
-                         coordinator="replica1" if replicas > 1 else "replica0")
+                         coordinator="replica1" if replicas > 1 else "replica0",
+                         admission_margin=admission_margin)
     for i in range(replicas):
         rep = Replica(f"replica{i}", cfg, params, slots=slots,
                       capacity=capacity,
                       prefill_chunk_tokens=prefill_chunk_tokens,
-                      step_slo_ms=step_slo_ms)
+                      step_slo_ms=step_slo_ms,
+                      brownout=BrownoutConfig() if brownout else None)
         fleet.add_replica(rep)
         print(f"replica{i}: warmup (compile) {rep.warmup_s:.2f}s — "
               f"cold-start paid up front; chunked prefill "
@@ -97,12 +109,26 @@ def main():
     ap.add_argument("--chaos-at-ms", type=float, default=500.0,
                     help="when the injected fault fires, relative to the "
                          "first request")
+    ap.add_argument("--priority", default="interactive",
+                    choices=list(PRIORITIES),
+                    help="priority class for every request: under overload "
+                         "the EDF queues shed lowest class first")
+    ap.add_argument("--admission-margin", type=float, default=0.0,
+                    help="feasibility-floor admission: reject a request "
+                         "whose deadline is below margin x the best-case "
+                         "completion floor (0 = admit everything)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="arm queue-pressure brownout on each replica "
+                         "(reversible degradation under sustained load; "
+                         "docs/SERVING.md)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     fleet = build_fleet(cfg, args.policy, replicas=args.replicas,
                         prefill_chunk_tokens=args.prefill_chunk_tokens,
-                        step_slo_ms=args.step_slo_ms)
+                        step_slo_ms=args.step_slo_ms,
+                        admission_margin=args.admission_margin,
+                        brownout=args.brownout)
 
     inj = None
     if args.chaos:
@@ -126,7 +152,8 @@ def main():
             req = Request(i, prompt, args.new_tokens, args.deadline_ms,
                           temperature=args.temperature, top_k=args.top_k,
                           top_p=args.top_p, seed=args.sample_seed + i,
-                          eos_id=args.eos_id if args.eos_id >= 0 else None)
+                          eos_id=args.eos_id if args.eos_id >= 0 else None,
+                          priority=args.priority)
             futs.append(ex.submit(fleet.submit, req))
             time.sleep(args.interval_ms / 1e3)
         results = [f.result() for f in futs]
@@ -136,11 +163,16 @@ def main():
     met = sum(1 for r in results if r.met(args.deadline_ms))
     failed = sum(1 for r in results if not r.ok)
     failovers = sum(1 for r in results if r.failed_over)
+    outcomes = {k: sum(1 for r in results if r.outcome == k)
+                for k in ("ok", "rejected", "shed", "lost")}
+    degraded = sum(1 for r in results if r.degraded)
     lats = sorted(r.latency_ms() for r in results)
     p50 = lats[len(lats) // 2]
     p99 = lats[min(int(len(lats) * 0.99), len(lats) - 1)]
     print(f"\npolicy={args.policy} requests={args.requests} met_SLO={met}"
           f" p50={p50:.0f}ms p99={p99:.0f}ms placements={fleet.stats}")
+    print("outcomes: " + " ".join(f"{k}={v}" for k, v in outcomes.items())
+          + f" degraded={degraded} browned_out={fleet.degraded()}")
     if args.chaos or failed or failovers:
         print(f"chaos summary: failed={failed} failed_over={failovers} "
               f"fleet_failovers={fleet.failovers} lost={fleet.lost} "

@@ -59,13 +59,14 @@ the scheduler logic is identical (it only sees profiles + telemetry).
 """
 from __future__ import annotations
 
+import bisect
 import contextlib
 import logging
 import random
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -73,13 +74,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
-from repro.core.latency import NodeState, Task, predict_total_ms
+from repro.core.admission import admit
+from repro.core.latency import (NodeState, Task, predict_process_ms,
+                                predict_queue_ms, predict_total_ms)
 from repro.core.policies import LOCAL, NodeView, Policy
 from repro.core.profile import AppProfile, Curve, DeviceProfile, LinkProfile
 from repro.core.telemetry import MaintainProfileTable, UpdateProfilePublisher
 from repro.ft.monitor import FleetMonitor
 from repro.models import model as model_lib
 from repro.serving import sampling as sampling_lib
+from repro.serving.overload import (BrownoutConfig, BrownoutController,
+                                    CircuitBreaker, priority_rank)
 
 log = logging.getLogger(__name__)
 
@@ -106,6 +111,23 @@ class ReplicaDead(ReplicaFailure):
 class ReplicaRefused(ReplicaFailure):
     """The replica refused the request at submit time (draining/stopped) —
     an accounted refusal, retry elsewhere after backoff."""
+
+
+class ReplicaSaturated(ReplicaFailure):
+    """The replica shed this request under overload — a bounded-queue
+    eviction or the deadline-aware queue sweep.  Unlike ``ReplicaDead`` /
+    ``ReplicaRefused`` this is a *terminal, accounted* outcome (``shed``),
+    not a retry signal: under fleet-wide overload every survivor sees the
+    same pressure, and retrying would convert shed work into retry load on
+    exactly the replicas that need relief.  ``retry_after_ms`` is the
+    profile-derived hint for when the client should resubmit (predicted
+    time for the current backlog to drain)."""
+
+    def __init__(self, replica: str, msg: str,
+                 partial: Optional[List[int]] = None,
+                 retry_after_ms: float = 0.0):
+        super().__init__(replica, msg, partial)
+        self.retry_after_ms = retry_after_ms
 
 
 class ReplicaLeak(RuntimeError):
@@ -139,15 +161,31 @@ class Request:
     seed: Optional[int] = None      # PRNG root; None -> request_id
     eos_id: Optional[int] = None    # stop (and trim) on this token
     stop_sequences: Tuple[Tuple[int, ...], ...] = ()
+    priority: str = "interactive"   # overload class: queues order
+                                    # (priority, deadline) and shedding
+                                    # drops the lowest class first
 
 
 @dataclass
 class RequestResult:
     """Outcome of one ``ServingFleet.submit``.  Failure is explicit, never
-    silent: ``attempts`` counts placements tried (>1 means the request was
+    silent — and *classified* (docs/FAULTS.md failure taxonomy):
+
+      * ``outcome="ok"`` — tokens delivered (``error`` is None);
+      * ``outcome="rejected"`` — admission turned the request away before
+        placement: its deadline sits below the fleet's measured
+        feasibility floor (the paper's minimum-time-constraint rule);
+      * ``outcome="shed"`` — an overloaded replica dropped it from the
+        queue (bounded-queue eviction or the deadline sweep);
+        ``retry_after_ms`` hints when to resubmit;
+      * ``outcome="lost"`` — every placement attempt failed (replica
+        death / refusals exhausted retries).
+
+    ``attempts`` counts placements tried (>1 means the request was
     re-routed at least once), ``failed_over`` marks completion on a replica
-    other than the first placement, and ``error`` is set — with whatever
-    partial tokens were decoded — when every attempt was exhausted."""
+    other than the first placement, ``ttft_ms`` is time to first token
+    (0.0 when none decoded), and ``degraded`` marks a response served
+    under brownout (clamped decode budget)."""
 
     request_id: int
     tokens: np.ndarray
@@ -157,6 +195,11 @@ class RequestResult:
     attempts: int = 1
     failed_over: bool = False
     error: Optional[str] = None
+    outcome: str = "ok"             # ok | rejected | shed | lost
+    priority: str = "interactive"
+    ttft_ms: float = 0.0
+    retry_after_ms: float = 0.0
+    degraded: bool = False
 
     @property
     def ok(self) -> bool:
@@ -173,7 +216,8 @@ class _Job:
     """One request's life inside the batched decoder."""
 
     __slots__ = ("req", "lane", "lane_cache", "consumed", "out", "remaining",
-                 "done", "key", "stops", "error")
+                 "done", "key", "stops", "error", "order", "first_ms",
+                 "degraded")
 
     def __init__(self, req: Request):
         self.req = req
@@ -184,6 +228,12 @@ class _Job:
         self.remaining = req.max_new_tokens
         self.done = threading.Event()
         self.error: Optional[ReplicaFailure] = None   # set before done on failure
+        # queue order: (priority rank, absolute deadline, arrival seq) —
+        # set at enqueue; the seq tiebreak keeps same-class same-deadline
+        # traffic FIFO
+        self.order: Tuple[int, float, int] = (0, 0.0, 0)
+        self.first_ms = 0.0             # wall-clock of the first token (TTFT)
+        self.degraded = False           # admitted under brownout clamping
         # per-lane PRNG root: sampled requests get a key derived only from
         # the request (never from batch state), split once per token
         self.key = (sampling_lib.make_lane_key(
@@ -270,6 +320,8 @@ class Replica:
     def __init__(self, name: str, cfg: ModelConfig, params, *,
                  slots: int = 2, capacity: int = 256,
                  prefill_chunk_tokens: int = 32, step_slo_ms: float = 0.0,
+                 max_queue: Optional[int] = None,
+                 brownout: Optional[BrownoutConfig] = None,
                  serving_mesh=None,
                  mesh_batch_axis: Optional[str] = "data",
                  mesh_seq_axis: str = "model"):
@@ -279,6 +331,15 @@ class Replica:
         self.capacity = capacity
         self.slots = slots
         self.step_slo_ms = float(step_slo_ms)
+        # bounded admission queue: a burst must reject/evict at the edge,
+        # not queue past the point where everything misses its deadline
+        self.max_queue = int(max_queue) if max_queue is not None \
+            else 4 * slots
+        if brownout is not None and brownout.step_slo_ms <= 0.0:
+            # default the pressure reference to the replica's own step SLO
+            brownout = replace(brownout, step_slo_ms=self.step_slo_ms)
+        self.brownout = BrownoutController(brownout) \
+            if brownout is not None else None
         self.prefill_caps = model_lib.chunked_prefill_caps(cfg, capacity)
         requested = max(min(int(prefill_chunk_tokens),
                             self.prefill_caps["max_chunk_tokens"]), 1)
@@ -297,11 +358,15 @@ class Replica:
         # UP loop: set by ServingFleet.add_replica / profile_replica; the
         # decode loop EWMAs live (occupancy, step_ms) samples into it
         self.profile: Optional[AppProfile] = None
+        self.device_profile: Optional[DeviceProfile] = None
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
-        self._pending: deque = deque()          # _Job waiting for a lane
+        # _Jobs waiting for a lane, kept sorted by (priority, deadline,
+        # seq): admission pops the head, overload evicts/sheds from the tail
+        self._pending: List[_Job] = []
         self._prefilling: deque = deque()       # _Job with a reserved lane
+        self._seq = 0                           # arrival tiebreak for order
         self._lanes: List[Optional[_Job]] = [None] * slots
         self._shutdown = False
         # graceful drain / eviction: False refuses new submissions (the
@@ -426,26 +491,92 @@ class Replica:
         }
 
     # -------------------------------------------------------------- serving
-    def generate(self, req: Request) -> np.ndarray:
+    @property
+    def browned_out(self) -> bool:
+        """True while the brownout controller has degradation engaged."""
+        return self.brownout is not None and self.brownout.engaged
+
+    def _retry_after_hint(self) -> float:
+        """Profile-derived resubmit hint for a shed request: predicted time
+        for the current backlog to drain through the lanes (queue waves x
+        measured per-task decode time at full occupancy).  Caller holds
+        the lock.  0.0 when the replica has no measured profile yet."""
+        prof = self.profile
+        if prof is None or prof.step_curve is None:
+            return 0.0
+        per_task = prof.tokens_per_task * prof.step_curve(float(self.slots))
+        waves = (len(self._pending) + len(self._prefilling) + 1) \
+            / max(self.slots, 1)
+        return waves * per_task
+
+    def generate_ex(self, req: Request) -> Tuple[np.ndarray, float, bool]:
         """Submit a request to the batched decoder and block for its tokens.
-        Concurrent callers share decode steps, not a semaphore."""
+        Concurrent callers share decode steps, not a semaphore.
+
+        Admission is bounded and deadline-ordered: the pending queue holds
+        at most ``max_queue`` jobs sorted by (priority class, absolute
+        deadline, arrival), and a full queue resolves in strict order — the
+        *worst* job (the arrival itself, or a queued job it outranks) is
+        shed with ``ReplicaSaturated`` + a retry-after hint, never blocked
+        and never silently dropped.  Under brownout the admitted decode
+        budget is clamped to the configured cap (the ``degraded`` flag in
+        the return reports it).
+
+        Returns ``(tokens, ttft_ms, degraded)``; ``ttft_ms`` is measured
+        from ``req.created_ms`` (or enqueue, if the caller never stamped
+        it) to the first emitted token."""
         if len(req.prompt) == 0:
             # reject in the CALLER's thread: an empty prompt reaching the
             # decode thread would kill it and strand every other lane
             raise ValueError(f"request {req.request_id}: empty prompt")
         job = _Job(req)
+        now = time.monotonic() * 1e3
+        born = req.created_ms or now
+        evicted: Optional[_Job] = None
         with self._work:
             if self._shutdown or not self._accepting:
                 raise ReplicaRefused(
                     self.name, f"replica {self.name} is "
                     f"{'stopped' if self._shutdown else 'not accepting'}")
-            self._pending.append(job)
+            if (self.browned_out
+                    and self.brownout.cfg.max_new_tokens_cap > 0
+                    and job.remaining > self.brownout.cfg.max_new_tokens_cap):
+                job.remaining = self.brownout.cfg.max_new_tokens_cap
+                job.degraded = True
+            self._seq += 1
+            job.order = (priority_rank(req.priority),
+                         born + req.deadline_ms, self._seq)
+            if len(self._pending) >= self.max_queue:
+                worst = max(self._pending, key=lambda j: j.order)
+                if worst.order < job.order:
+                    raise ReplicaSaturated(
+                        self.name,
+                        f"replica {self.name}: queue full "
+                        f"({self.max_queue})",
+                        retry_after_ms=self._retry_after_hint())
+                # the arrival outranks the tail: evict the worst queued job
+                self._pending.remove(worst)
+                worst.error = ReplicaSaturated(
+                    self.name,
+                    f"replica {self.name}: queue full, evicted for a "
+                    f"higher-priority/earlier-deadline arrival",
+                    list(worst.out),
+                    retry_after_ms=self._retry_after_hint())
+                evicted = worst
+            bisect.insort(self._pending, job, key=lambda j: j.order)
             self._last_progress_ms = time.monotonic() * 1e3
             self._work.notify()
+        if evicted is not None:
+            evicted.done.set()
         job.done.wait()
         if job.error is not None:
             raise job.error
-        return np.asarray(job.out, np.int32)
+        ttft = (job.first_ms - born) if job.first_ms > 0.0 else 0.0
+        return np.asarray(job.out, np.int32), ttft, job.degraded
+
+    def generate(self, req: Request) -> np.ndarray:
+        """``generate_ex`` without the telemetry tuple (tokens only)."""
+        return self.generate_ex(req)[0]
 
     def generate_sequential(self, req: Request) -> np.ndarray:
         """Batch-1 reference greedy decode (the pre-batching engine):
@@ -567,7 +698,14 @@ class Replica:
                 while (not self._shutdown and not self._pending
                        and not self._prefilling
                        and all(j is None for j in self._lanes)):
-                    self._work.wait()
+                    if self.browned_out:
+                        # idle = pressure is definitionally gone: feed
+                        # clear samples so brownout restores while parked
+                        # instead of waiting for the next traffic burst
+                        self.brownout.observe(0.0, 0)
+                        self._work.wait(0.01)
+                    else:
+                        self._work.wait()
                 if self._shutdown:
                     stranded = (list(self._pending) + list(self._prefilling)
                                 + [j for j in self._lanes if j is not None])
@@ -575,13 +713,18 @@ class Replica:
                     for j in stranded:
                         j.done.set()    # callers get whatever decoded so far
                     return
+                # shed: queued jobs whose predicted wait already exceeds
+                # their remaining slack will only burn lanes — drop them
+                # now (lowest priority / latest deadline first, since the
+                # queue is ordered and position inflates predicted wait)
+                shed = self._shed_sweep_locked(time.monotonic() * 1e3)
                 # admit: waiting requests claim free lanes
                 reserved = {j.lane for j in self._prefilling}
                 for lane in range(self.slots):
                     if not self._pending:
                         break
                     if self._lanes[lane] is None and lane not in reserved:
-                        job = self._pending.popleft()
+                        job = self._pending.pop(0)
                         job.lane = lane
                         reserved.add(lane)
                         self._prefilling.append(job)
@@ -590,6 +733,8 @@ class Replica:
                 # snapshot the prefill head under the lock: fail_inflight
                 # may clear the deque from the monitor thread at any time
                 head = self._prefilling[0] if self._prefilling else None
+            for j in shed:
+                j.done.set()
 
             # one prefill chunk for the oldest admitted prompt — budgeted
             # work, so in-flight decodes stall at most the SLO slack
@@ -598,6 +743,50 @@ class Replica:
 
             if active:
                 self._decode_step(active)
+
+    def _shed_sweep_locked(self, now_ms: float) -> List[_Job]:
+        """Walk the pending queue in order and drop every job whose
+        predicted ``T_que + T_process`` exceeds its remaining deadline
+        slack (the paper's predictor, pointed at our own queue).  Each
+        job is priced at its *post-shed* queue position, so better-ranked
+        jobs are evaluated against a queue that excludes the work shed
+        ahead of them — shedding the tail is exactly what keeps the head
+        feasible.  Caller holds the lock; caller must ``done.set()`` the
+        returned jobs after releasing it."""
+        if not self._pending:
+            return []
+        prof = self.profile
+        if prof is None or prof.step_curve is None:
+            return []                   # no measured profile: nothing to predict
+        if self.device_profile is None:
+            self.device_profile = DeviceProfile(
+                self.name, self.slots, {"serve": prof})
+        dev = self.device_profile
+        running = sum(1 for j in self._lanes if j is not None)
+        nres = len(self._prefilling)
+        shed: List[_Job] = []
+        keep: List[_Job] = []
+        for job in self._pending:
+            req = job.req
+            slack = job.order[1] - now_ms       # absolute deadline - now
+            task = Task(task_id=req.request_id, app_id="serve",
+                        size_kb=float(len(req.prompt)), created_ms=0.0,
+                        constraint_ms=req.deadline_ms)
+            state = NodeState(running=running, queued=len(keep),
+                              reserved=nres)
+            t = (predict_queue_ms(dev, task, state)
+                 + predict_process_ms(dev, task, state))
+            (shed if t > slack else keep).append(job)
+        if shed:
+            self._pending = keep
+            hint = self._retry_after_hint()
+            for job in shed:
+                job.error = ReplicaSaturated(
+                    self.name,
+                    f"replica {self.name}: shed {job.req.priority} request "
+                    f"{job.req.request_id} (predicted wait exceeds "
+                    f"deadline slack)", list(job.out), retry_after_ms=hint)
+        return shed
 
     def budget_tokens(self, occupancy: int) -> int:
         """SLO-adaptive prefill budget for one interleave slot: how many
@@ -610,8 +799,14 @@ class Replica:
         (both live-EWMA'd by the Update-Profile loop), divided by the
         measured per-token chunk cost — floored at 1 token so admitted
         prompts always make progress (the SLO shrinks chunks; it cannot
-        starve them)."""
+        starve them).
+
+        Under brownout the ceiling itself shrinks by the configured
+        ``budget_factor`` — prefill is the deferrable work, so degrading
+        it first protects the in-flight decode cadence."""
         mx = self.prefill_chunk_tokens
+        if self.browned_out:
+            mx = max(int(mx * self.brownout.cfg.budget_factor), 1)
         prof = self.profile
         if self.step_slo_ms <= 0.0 or occupancy <= 0 or prof is None:
             return mx
@@ -702,6 +897,7 @@ class Replica:
                                             # never install a dead job
             if job.remaining > 0:
                 job.out.append(first)
+                job.first_ms = time.monotonic() * 1e3   # TTFT stamp
                 job.remaining -= 1
                 if job.hit_stop():          # eos/stop on the very first token
                     job.remaining = 0
@@ -742,11 +938,16 @@ class Replica:
                                           jnp.asarray(self._idx))
         nxt_np = np.asarray(nxt)        # the one (slots,) transfer per step
         self._last_progress_ms = time.monotonic() * 1e3
+        step_ms = (time.perf_counter() - t0) * 1e3
         prof = self.profile             # Update-Profile: live step telemetry
         if prof is not None:
-            prof.observe_step(len(active), (time.perf_counter() - t0) * 1e3)
+            prof.observe_step(len(active), step_ms)
         finished: List[_Job] = []
         with self._work:
+            if self.brownout is not None:
+                # pressure sample: live step cadence + waiting queue depth
+                self.brownout.observe(
+                    step_ms, len(self._pending) + len(self._prefilling))
             for lane in active:
                 job = self._lanes[lane]
                 if job is None:
@@ -774,19 +975,28 @@ class Replica:
     # ------------------------------------------------------------ telemetry
     def state(self) -> NodeState:
         """Lane occupancy of the shared decode batch (not semaphore counts):
-        ``running`` = lanes actively decoding, ``queued`` = requests waiting
-        for a lane or mid-prefill."""
+        ``running`` = lanes actively decoding, ``reserved`` = lanes held by
+        an in-progress prefill, ``queued`` = requests still waiting for a
+        lane.  Prefilling jobs live in ``reserved`` ONLY — counting them in
+        ``queued`` too made every consumer double-charge them (capacity
+        math subtracted them and T_que priced them as waiting work).
+        ``brownout`` rides along so the Update-Profile heartbeat advertises
+        degradation honestly to routing."""
         with self._lock:
             running = sum(1 for j in self._lanes if j is not None)
-            queued = len(self._pending) + len(self._prefilling)
-        return NodeState(running=running, queued=queued,
+            reserved = len(self._prefilling)
+            queued = len(self._pending)
+        return NodeState(running=running, queued=queued, reserved=reserved,
+                         brownout=self.browned_out,
                          updated_ms=time.monotonic() * 1e3)
 
     def free_slots(self) -> int:
-        """Lanes not occupied, reserved, or already spoken for."""
+        """Lanes not occupied or reserved by an in-progress prefill.
+        Queued requests wait for a lane but do not *hold* one — their cost
+        is priced by the T_que predictor, not subtracted from capacity."""
         with self._lock:
             occupied = sum(1 for j in self._lanes if j is not None)
-            occupied += len(self._prefilling) + len(self._pending)
+            occupied += len(self._prefilling)
             return max(self.slots - occupied, 0)
 
 
@@ -930,6 +1140,8 @@ class ServingFleet:
                  heartbeat_ms: float = 20.0, staleness_factor: float = 25.0,
                  progress_timeout_ms: float = 5_000.0, max_attempts: int = 3,
                  retry_backoff_ms: float = 20.0, monitor: bool = True,
+                 admission_margin: float = 1.0,
+                 breaker_threshold: int = 3, breaker_open_ms: float = 500.0,
                  seed: int = 0):
         self.policy = policy
         self.source = source
@@ -955,7 +1167,18 @@ class ServingFleet:
         self.stats: Dict[str, int] = {}
         self.failovers = 0               # requests re-routed off a dead replica
         self.lost = 0                    # requests reported failed (visible!)
+        self.rejected = 0                # admission-rejected (infeasible SLO)
+        self.shed = 0                    # overload-shed by a replica queue
         self.dead: List[str] = []        # replicas the monitor evicted
+        # admission: deadline must clear the fleet's measured feasibility
+        # floor x margin (paper's minimum-time-constraint rule); <= 0
+        # disables the gate
+        self.admission_margin = float(admission_margin)
+        # per-replica circuit breakers: repeated dead/refused failures stop
+        # retry traffic from re-slamming a sick replica
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_open_ms = float(breaker_open_ms)
+        self.breakers: Dict[str, CircuitBreaker] = {}
         self._rng = random.Random(seed)  # retry-backoff jitter
         self._lock = threading.Lock()    # guards membership dicts + stats
         self.monitor: Optional[FleetMonitor] = None
@@ -972,12 +1195,15 @@ class ServingFleet:
         dev = DeviceProfile(
             rep.name, rep.slots, {"serve": prof},
             link or LinkProfile(bandwidth_kbps=1e6, rtt_ms=0.2))
+        rep.device_profile = dev        # shed sweep prices its own queue
         pub = UpdateProfilePublisher(rep.name, dev, rep.state, self.table,
                                      self.heartbeat_ms)
         with self._lock:
             self.replicas[rep.name] = rep
             self.profiles[rep.name] = dev
             self._publishers[rep.name] = pub
+            self.breakers[rep.name] = CircuitBreaker(
+                self.breaker_threshold, self.breaker_open_ms)
         if self.monitor is not None:
             self.monitor.revive(rep.name)   # a rejoin clears prior death
         pub.start()
@@ -993,6 +1219,7 @@ class ServingFleet:
             pub = self._publishers.pop(name, None)
             self.profiles.pop(name, None)
             rep = self.replicas.pop(name, None)
+            self.breakers.pop(name, None)
         if pub:
             pub.stop()
         self.table.remove(name)
@@ -1032,6 +1259,7 @@ class ServingFleet:
             pub = self._publishers.pop(name, None)
             self.profiles.pop(name, None)
             rep = self.replicas.pop(name, None)
+            self.breakers.pop(name, None)
             if rep is not None:
                 self.dead.append(name)
         if pub:
@@ -1065,7 +1293,11 @@ class ServingFleet:
         if rec is None:                 # no heartbeat yet: fall back to live
             return NodeView(profile=prof, state=rep.state(),
                             free_slots=rep.free_slots())
-        free = max(rep.slots - rec.state.running - rec.state.queued, 0)
+        # capacity = lanes minus occupied and reserved (mid-prefill) lanes;
+        # queued jobs hold no lane and are priced by T_que — subtracting
+        # them here double-counted prefilling jobs and under-reported
+        # free capacity to routing
+        free = max(rep.slots - rec.state.running - rec.state.reserved, 0)
         return NodeView(profile=rec.profile, state=rec.state, free_slots=free)
 
     def route(self, req: Request) -> str:
@@ -1135,41 +1367,123 @@ class ServingFleet:
         base = self.retry_backoff_ms * (2.0 ** (attempt - 1))
         return base * (0.5 + 0.5 * self._rng.random()) / 1e3
 
+    def degraded(self) -> List[str]:
+        """Replicas currently advertising brownout through the UP
+        heartbeat (the honest, staleness-tolerant view routing also
+        sees)."""
+        return self.table.degraded_nodes()
+
+    def _admission_check(self, req: Request) -> Optional[RequestResult]:
+        """Feasibility-floor admission (the paper's minimum-time-constraint
+        rule): a deadline below the best-case T_task any replica could
+        deliver — measured profiles, idle state — times the headroom
+        margin is *rejected* in the caller's thread, before routing or
+        queueing.  Returns the rejected result, or None to admit."""
+        if self.admission_margin <= 0.0:
+            return None
+        task = Task(task_id=req.request_id, app_id="serve",
+                    size_kb=float(len(req.prompt)),
+                    created_ms=req.created_ms, constraint_ms=req.deadline_ms,
+                    source=self.source)
+        with self._lock:
+            profiles = dict(self.profiles)
+        ok, floor = admit(profiles, task, self.source, self.admission_margin)
+        if ok:
+            return None
+        with self._lock:
+            self.rejected += 1
+        return RequestResult(
+            req.request_id, np.asarray([], np.int32),
+            time.monotonic() * 1e3, "-", req.created_ms, attempts=0,
+            outcome="rejected", priority=req.priority,
+            error=(f"deadline {req.deadline_ms:.0f}ms below feasibility "
+                   f"floor {floor:.0f}ms (margin "
+                   f"{self.admission_margin:g})"))
+
+    def _shed_result(self, req: Request, e: ReplicaSaturated,
+                     attempts: int) -> RequestResult:
+        with self._lock:
+            self.shed += 1
+        return RequestResult(
+            req.request_id, np.asarray([], np.int32),
+            time.monotonic() * 1e3, e.replica, req.created_ms,
+            attempts=attempts, outcome="shed", priority=req.priority,
+            retry_after_ms=e.retry_after_ms, error=str(e))
+
     def submit(self, req: Request) -> RequestResult:
-        """Route, generate, and — on replica death or refusal — retry on a
-        survivor while the deadline still allows, up to ``max_attempts``
-        placements.  Greedy and seeded-sampled decodes are deterministic
-        functions of the request, so a failover retry regenerates the
-        token-identical stream from scratch; partial tokens from the dead
-        replica are never stitched.  Exhausted requests return an error
-        result (``ok=False``, partial tokens attached) and count in
-        ``lost`` — the failure mode is visible, never a hang or a silently
-        truncated stream."""
+        """Admit, route, generate, and — on replica death or refusal —
+        retry on a survivor while the deadline still allows, up to
+        ``max_attempts`` placements.  Every return is a *classified*
+        ``RequestResult`` (see its docstring / docs/FAULTS.md): admission
+        rejects infeasible deadlines fast (never blocked, never counted
+        lost), an overloaded replica's queue eviction or shed sweep comes
+        back as a terminal ``shed`` with a retry-after hint (retrying
+        would re-slam a saturated fleet), and per-replica circuit breakers
+        take repeat offenders out of routing until a half-open probe
+        heals them.
+
+        Greedy and seeded-sampled decodes are deterministic functions of
+        the request, so a failover retry regenerates the token-identical
+        stream from scratch; partial tokens from the dead replica are
+        never stitched.  Exhausted requests return an error result
+        (``ok=False``, partial tokens attached) and count in ``lost`` —
+        the failure mode is visible, never a hang or a silently truncated
+        stream."""
         req.created_ms = req.created_ms or time.monotonic() * 1e3
+        rejected = self._admission_check(req)
+        if rejected is not None:
+            return rejected
         attempts = 0
         first_name: Optional[str] = None
         last_err: Optional[ReplicaFailure] = None
         while attempts < self.max_attempts:
             attempts += 1
             members = self._members()
+            # breaker gate: replicas in cooldown leave routing (unless
+            # every member is — then routing proceeds and acquire() below
+            # settles who, if anyone, gets the half-open probe)
+            tripped = [n for n in members
+                       if n in self.breakers
+                       and not self.breakers[n].available()]
+            if tripped and len(tripped) < len(members):
+                members = {n: r for n, r in members.items()
+                           if n not in tripped}
             avoid = last_err.replica if last_err is not None else None
             try:
                 name = self._route(req, members, avoid=avoid)
             except ReplicaRefused as e:
                 last_err = e
                 break                   # no live replicas: nothing to wait for
+            brk = self.breakers.get(name)
+            if brk is not None and not brk.acquire():
+                # breaker still open (or another thread won the probe
+                # slot): spend the attempt elsewhere
+                last_err = ReplicaRefused(
+                    name, f"replica {name}: circuit breaker open")
+                continue
             first_name = first_name or name
             with self._lock:
                 self.stats[name] = self.stats.get(name, 0) + 1
                 if attempts > 1:
                     self.failovers += 1
             try:
-                toks = members[name].generate(req)
+                toks, ttft, degraded = members[name].generate_ex(req)
+                if brk is not None:
+                    brk.on_success()
                 return RequestResult(
                     req.request_id, toks, time.monotonic() * 1e3, name,
                     req.created_ms, attempts=attempts,
-                    failed_over=(name != first_name))
+                    failed_over=(name != first_name),
+                    priority=req.priority, ttft_ms=ttft, degraded=degraded)
+            except ReplicaSaturated as e:
+                # the replica answered (it is alive, just overloaded):
+                # success for the breaker, terminal shed for the request
+                if brk is not None:
+                    brk.on_success()
+                return self._shed_result(req, e, attempts)
             except ReplicaFailure as e:
+                if brk is not None:
+                    brk.on_failure()
                 last_err = e
                 log.info("request %d attempt %d on %s failed: %s",
                          req.request_id, attempts, name, e)
@@ -1186,5 +1500,6 @@ class ServingFleet:
         return RequestResult(
             req.request_id, partial, time.monotonic() * 1e3,
             last_err.replica if last_err else "-", req.created_ms,
-            attempts=attempts, failed_over=False,
+            attempts=attempts, failed_over=False, outcome="lost",
+            priority=req.priority,
             error=str(last_err) if last_err else "no attempt succeeded")
