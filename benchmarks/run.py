@@ -172,6 +172,97 @@ def bench_serving_recurrent_throughput():
                   f"chunked_prefill=on")
 
 
+def bench_serving_paging():
+    """The paged-KV memory unlock, measured at FIXED KV memory: the same
+    token budget that buys the ring engine 8 worst-case lanes buys the
+    paged engine 16+ usage-sized lanes — every one of which must serve a
+    real request concurrently, token streams intact.  Also records
+    tokens/sec at concurrency 8 with the prefix cache on (requests share
+    a system prompt, so its KV is computed once) — the ``paging`` row of
+    BENCH_serving.json tracks both across PRs (docs/PAGING.md)."""
+    import threading
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.engine import Replica, Request
+
+    cfg = get_smoke_config("granite-8b").replace(param_dtype=jnp.float32,
+                                                 dtype=jnp.float32)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    capacity, page_size = 128, 8
+    ring_slots = 8
+    budget_tokens = ring_slots * capacity       # the fixed KV budget
+    num_pages = budget_tokens // page_size
+    paged_slots = 16
+    prompt_len, new_tokens = 16, 16             # realistic << capacity
+    # a lane's reservation for this workload, in pages
+    need = -(-(prompt_len + new_tokens - 1) // page_size)
+    assert paged_slots * need <= num_pages      # all lanes fit the pool
+    assert paged_slots >= 2 * ring_slots        # the >=2x memory unlock
+
+    rep = Replica("bench-paged", cfg, params, slots=paged_slots,
+                  capacity=capacity, prefill_chunk_tokens=16,
+                  paged=True, page_size=page_size, num_pages=num_pages,
+                  prefix_cache=True)
+    rng = np.random.default_rng(0)
+    sysp = rng.integers(2, cfg.vocab_size, size=(8,)).astype(np.int32)
+
+    def reqs(n, base=0):
+        # shared 1-block system prompt + private suffix
+        return [Request(base + i, np.concatenate(
+            [sysp, rng.integers(2, cfg.vocab_size,
+                                size=(prompt_len - 8,))]).astype(np.int32),
+            new_tokens, 1e9) for i in range(n)]
+
+    rep.generate(reqs(1)[0])                    # warm + seed the prefix
+
+    def run_conc(rs):
+        out = {}
+        t0 = time.perf_counter()
+        def go(r):
+            out[r.request_id] = rep.generate(r)
+        threads = [threading.Thread(target=go, args=(r,)) for r in rs]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return out, time.perf_counter() - t0
+
+    # 2x the ring's slot count, all genuinely concurrent at fixed memory
+    out, _ = run_conc(reqs(paged_slots, base=100))
+    assert len(out) == paged_slots
+    assert all(len(v) == new_tokens for v in out.values())
+    rep._alloc.check()
+
+    rows, tps = [], {}
+    for conc in (1, 8):
+        out, dt = run_conc(reqs(conc, base=200 + 10 * conc))
+        tps[conc] = conc * new_tokens / dt
+        rows.append({"conc": conc, "paged_tok_s": round(tps[conc], 1)})
+    hit_rate = rep._prefix.hit_rate()
+    assert hit_rate > 0.0                       # shared prompt actually hit
+    cow = rep.cow_copies
+    rep.stop()
+
+    SERVING_METRICS["paging"] = {
+        "fixed_kv_budget_tokens": budget_tokens,
+        "ring_slots_at_budget": ring_slots,
+        "paged_slots_at_budget": paged_slots,
+        "slot_multiplier": round(paged_slots / ring_slots, 2),
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "prefix_hit_rate": round(hit_rate, 3),
+        "cow_copies": cow,
+        "tokens_per_sec": {f"conc{c}": round(v, 1) for c, v in tps.items()},
+    }
+    return rows, (f"slots@fixed_mem={paged_slots}v{ring_slots} "
+                  f"(x{paged_slots / ring_slots:.1f}) "
+                  f"conc8={tps[8]:.0f}tok/s hit_rate={hit_rate:.2f}")
+
+
 def bench_serving_routing():
     """DDS routing over a measured lane-mode profile: submit a burst of
     deadline-carrying requests through ServingFleet and record the
@@ -741,6 +832,11 @@ def main() -> None:
                          "+ brownout + breakers) and assert the 3x-load "
                          "goodput plateau; merges the overload row into the "
                          "serving JSON (CI)")
+    ap.add_argument("--paging-smoke", action="store_true",
+                    help="run only the paged-KV bench (>=2x concurrent "
+                         "slots at fixed memory, prefix-cache hit rate, "
+                         "tok/s); merges the paging row into the serving "
+                         "JSON (CI)")
     ap.add_argument("--serving-json",
                     default=os.path.join(os.path.dirname(
                         os.path.abspath(__file__)), "..",
@@ -751,6 +847,7 @@ def main() -> None:
     serving = [("bench_serving_throughput", bench_serving_throughput),
                ("bench_serving_recurrent_throughput",
                 bench_serving_recurrent_throughput),
+               ("bench_serving_paging", bench_serving_paging),
                ("bench_serving_routing", bench_serving_routing),
                ("bench_serving_mesh_step_curve", bench_serving_mesh_step_curve),
                ("bench_serving_churn", bench_serving_churn),
@@ -759,10 +856,14 @@ def main() -> None:
         benches = [("chaos_smoke", chaos_smoke)]
     elif args.overload_smoke:
         benches = [("bench_serving_overload", bench_serving_overload)]
+    elif args.paging_smoke:
+        benches = [("bench_serving_paging", bench_serving_paging)]
     elif args.serving_smoke:
-        # the overload sweep has its own CI smoke; keep the serving smoke
-        # at its current runtime
-        benches = serving[:-1]
+        # the overload sweep and the paging bench have their own CI
+        # smokes; keep the serving smoke at its current runtime
+        benches = [b for b in serving
+                   if b[0] not in ("bench_serving_overload",
+                                   "bench_serving_paging")]
     else:
         benches = list(BENCHES) + serving
         if args.live:

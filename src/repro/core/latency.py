@@ -80,9 +80,14 @@ def predict_queue_ms(profile: DeviceProfile, task: Task,
             per_task *= app.load_curve(state.cpu_load) / app.load_curve(0.0)
         # reserved (mid-prefill) lanes are not waiting for a slot, but
         # their remaining prefill chunks still interleave ahead of a
-        # joining prompt's — charge them the interleave term only
+        # joining prompt's — charge them the interleave term only.  On a
+        # paged replica a measured fraction of prompts joins on cached
+        # prefix pages and skips (most of) that prefill: charging full
+        # interleave would make shared-prompt replicas look busier than
+        # they are, so the term is discounted by the observed hit rate.
+        hit = min(max(getattr(app, "prefix_hit_rate", 0.0), 0.0), 1.0)
         return (waves * per_task
-                + (state.queued + state.reserved)
+                + (state.queued + state.reserved) * (1.0 - hit)
                 * app.interleave_ms(max(task.size_kb, 1.0)))
     per_task = app.process_time(task.size_kb, min(profile.slots, max(
         state.running, 1)), state.cpu_load)

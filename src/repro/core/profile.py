@@ -128,6 +128,13 @@ class AppProfile:
     tokens_per_task: float = 0.0         # reference decode length (steps/task)
     prefill_chunk_ms: float = 0.0        # chunked-prefill interleave cost (ms)
     prefill_chunk_tokens: float = 0.0    # tokens per interleaved chunk (0 = whole-prompt)
+    # --- paged-KV telemetry (published per heartbeat by paged replicas) --
+    # prefix_hit_rate discounts the interleave charge for joins whose
+    # prompt prefix is already resident (prefilled once, shared via the
+    # replica's prefix cache); free_pages is admission headroom (free +
+    # immediately reclaimable KV pages; -1.0 = replica is not paged).
+    prefix_hit_rate: float = 0.0         # fraction of lookups hitting >= 1 block
+    free_pages: float = -1.0             # free + reclaimable KV pages (-1 = unpaged)
     # guards the prefill_chunk_ms EWMA read-modify-write (same UP-writer vs
     # heartbeat-copier pattern the Curve lock covers); bare reads of the
     # float stay lock-free
@@ -243,7 +250,8 @@ class AppProfile:
             self.reference_size,
             self.step_curve.copy() if self.step_curve else None,
             self.tokens_per_task, self.prefill_chunk_ms,
-            self.prefill_chunk_tokens)
+            self.prefill_chunk_tokens, self.prefix_hit_rate,
+            self.free_pages)
 
 
 @dataclass

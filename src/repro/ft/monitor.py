@@ -55,11 +55,34 @@ class StragglerMonitor:
         self.dead_after_ms = dead_after_ms
         self.min_steps = min_steps
         self.stats: Dict[str, WorkerStepStats] = {}
+        self._incarnation: Dict[str, int] = {}
         self._lock = threading.Lock()
 
-    def observe(self, worker: str, step_ms: float) -> None:
+    def observe(self, worker: str, step_ms: float,
+                incarnation: int = 0) -> None:
+        """Fold one step sample into ``worker``'s EWMA.
+
+        ``incarnation`` guards against name recycling (the simulator's
+        kill/rejoin semantics): a worker that dies and rejoins under the
+        same name is a *new* process whose step distribution owes nothing
+        to the dead one's, so a sample from a newer incarnation resets the
+        stats instead of inheriting the corpse's EWMA — and a straggling
+        ghost sample from an older incarnation (in flight across the
+        rejoin) is dropped rather than polluting the fresh record."""
         with self._lock:
-            self.stats.setdefault(worker, WorkerStepStats()).observe(step_ms)
+            cur = self._incarnation.get(worker, 0)
+            if incarnation < cur:
+                return                          # stale incarnation's sample
+            if incarnation > cur or worker not in self.stats:
+                self._incarnation[worker] = incarnation
+                self.stats[worker] = WorkerStepStats()
+            self.stats[worker].observe(step_ms)
+
+    def forget(self, worker: str) -> None:
+        """Drop ``worker``'s record entirely (left the fleet for good)."""
+        with self._lock:
+            self.stats.pop(worker, None)
+            self._incarnation.pop(worker, None)
 
     def health(self, now_ms: Optional[float] = None) -> FleetHealth:
         now_ms = now_ms if now_ms is not None else time.monotonic() * 1e3

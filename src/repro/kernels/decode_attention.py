@@ -131,3 +131,134 @@ def decode_attention(q, k_cache, v_cache, *, cache_len, window=0, scale=None,
         interpret=interpret,
     )(cache_len_arr, qg, k_cache, v_cache)
     return out.reshape(b, 1, hq, d)
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, pos_ref,
+                         o_ref, m_scr, l_scr, acc_scr,
+                         *, scale, window, softcap, page, max_pages):
+    b_ = pl.program_id(0)
+    pi = pl.program_id(2)
+    cache_len = len_ref[b_]
+    page_id = tbl_ref[b_ * max_pages + pi]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # A table slot with no page mapped, beyond this lane's length, or (with
+    # a sliding window) wholly before it contributes nothing — and because
+    # the BlockSpec index map routed an absent slot to a clamped row, the
+    # gathered tile may be another lane's page: it must never reach the MXU.
+    lane_live = (page_id >= 0) & (pi * page < cache_len)
+    if window > 0:
+        lane_live &= (pi + 1) * page > cache_len - 1 - window
+
+    @pl.when(lane_live)
+    def _accumulate():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)      # (q_per_kv, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+
+        # A page slot is real only if the position actually written there is
+        # the absolute position this table slot stands for — a page recycled
+        # from a freed lane, or written only up to mid-page, fails this.
+        kpos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos < cache_len) & (pos_ref[...] == kpos)
+        if window > 0:
+            mask &= kpos > cache_len - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == max_pages - 1)
+    def _done():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, pos_pages, tables, *,
+                           cache_len, window=0, scale=None, softcap=0.0,
+                           interpret=False):
+    """Flash-decode over a block-table paged KV pool.
+
+    q:         (B, 1, Hq, D); pools: (P, page, Hkv, D); pos: (P, page)
+    tables:    (B, max_pages) int32 page ids, -1 = absent
+    cache_len: scalar or (B,) per-lane lengths.
+
+    Same streaming grid as ``decode_attention`` with the KV-block axis
+    replaced by the table-slot axis: the block table and per-lane lengths
+    ride in scalar prefetch (``PrefetchScalarGridSpec``) so each KV tile's
+    BlockSpec index map *dereferences the table* — the pipeline DMAs
+    exactly the pages the lane owns, in position order, and non-contiguous
+    pool rows cost nothing extra.  The page tile doubles as the flash
+    block; masking re-checks the gathered ``pos`` so a recycled page never
+    leaks a previous tenant's keys.  Validated in interpret mode against
+    ``ref.paged_decode_mha_reference``.
+    """
+    b, _, hq, d = q.shape
+    page, hkv = k_pages.shape[1], k_pages.shape[2]
+    rep = hq // hkv
+    max_pages = tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+
+    qg = q[:, 0].reshape(b, hkv, rep, d)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+    tbl = tables.reshape(-1).astype(jnp.int32)          # (B * max_pages,)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, window=window, softcap=softcap,
+        page=page, max_pages=max_pages)
+
+    def _page_row(b_, h, pi, tbl_ref, len_ref):
+        # Clamp absent (-1) slots to row 0: the tile is skipped in-kernel.
+        return jnp.maximum(tbl_ref[b_ * max_pages + pi], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d),
+                         lambda b_, h, pi, tbl_ref, len_ref: (b_, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h, pi, tbl_ref, len_ref:
+                         (_page_row(b_, h, pi, tbl_ref, len_ref), 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h, pi, tbl_ref, len_ref:
+                         (_page_row(b_, h, pi, tbl_ref, len_ref), 0, h, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b_, h, pi, tbl_ref, len_ref:
+                         (_page_row(b_, h, pi, tbl_ref, len_ref), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda b_, h, pi, tbl_ref, len_ref:
+                               (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(tbl, lens, qg, k_pages, v_pages, pos_pages)
+    return out.reshape(b, 1, hq, d)

@@ -60,6 +60,23 @@ def decode_attention(q, k_cache, v_cache, *, cache_len, window=0, scale=None,
                                     window=window, scale=scale, softcap=softcap)
 
 
+def paged_decode_attention(q, k_pages, v_pages, pos_pages, tables, *,
+                           cache_len, window=0, scale=None, softcap=0.0):
+    """(B,1,H,D) + (P,page,Hkv,D) pools + (B,max_pages) block tables
+    -> (B,1,H,D).  The paged counterpart of ``decode_attention``: KV lives
+    in a shared page pool and each lane reads the rows its table names."""
+    impl = _impl()
+    if impl.startswith("pallas"):
+        from repro.kernels import decode_attention as dk
+        return dk.paged_decode_attention(
+            q, k_pages, v_pages, pos_pages, tables, cache_len=cache_len,
+            window=window, scale=scale, softcap=softcap,
+            interpret=impl == "pallas_interpret")
+    return ref.paged_decode_mha_reference(
+        q, k_pages, v_pages, pos_pages, tables, cache_len=cache_len,
+        window=window, scale=scale, softcap=softcap)
+
+
 # ------------------------------------------------------------------------ SSD
 def ssd(x, dt, a_log, b_mat, c_mat, d_skip=None, chunk=128):
     impl = _impl()

@@ -114,6 +114,43 @@ def decode_mha_masked(q, k_cache, v_cache, *, valid_mask, scale=None,
     return out.astype(q.dtype)
 
 
+def paged_decode_mha_reference(q, k_pages, v_pages, pos_pages, tables, *,
+                               cache_len, window=0, scale=None, softcap=0.0):
+    """Block-table decode oracle: gather each lane's pages, then attend.
+
+    q:         (B, 1, Hq, D) current-token queries
+    k/v_pages: (P, page, Hkv, D) shared page pools (P includes the dump row)
+    pos_pages: (P, page) int32 absolute position written at each slot (-1 empty)
+    tables:    (B, maxp) int32 block tables; entry j holds the page backing
+               absolute positions [j*page, (j+1)*page), or -1 if absent
+    cache_len: scalar or (B,) tokens already in each lane's history; the
+               query is at position cache_len - 1.
+
+    A gathered slot participates only when every guard agrees it holds the
+    key this lane expects there: the table entry exists, the written
+    position equals the slot's expected absolute position (stale pages from
+    a previous tenant fail this), it is causally visible, and it is inside
+    the sliding window.  Everything else about the math defers to
+    ``decode_mha_masked`` so paged and ring decode share one numeric core.
+    """
+    b = q.shape[0]
+    page = k_pages.shape[1]
+    maxp = tables.shape[1]
+    safe = jnp.maximum(tables, 0)                                # (B, maxp)
+    k = k_pages[safe].reshape(b, maxp * page, *k_pages.shape[2:])
+    v = v_pages[safe].reshape(b, maxp * page, *v_pages.shape[2:])
+    pos = pos_pages[safe].reshape(b, maxp * page)                # (B, T)
+    expected = jnp.arange(maxp * page, dtype=jnp.int32)[None]    # (1, T)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                          (b,)).reshape(b, 1)
+    valid = (pos == expected) & (expected < cl)
+    valid &= jnp.repeat(tables >= 0, page, axis=1)
+    if window > 0:
+        valid &= expected > cl - 1 - window
+    return decode_mha_masked(q, k, v, valid_mask=valid, scale=scale,
+                             softcap=softcap)
+
+
 def mha_cache_masked(q, k_cache, v_cache, *, mask, scale=None, softcap=0.0):
     """Multi-query attention against a (partially filled) KV cache with an
     explicit per-query mask — the chunked-prefill oracle.

@@ -23,6 +23,11 @@ and the summary reports failovers / lost requests alongside the SLO
 accounting — a live demonstration of detection, eviction, and
 deadline-aware retry.
 
+Paged KV (docs/PAGING.md): ``--paged`` swaps per-lane rings for block-table
+lanes over a shared page pool (``--page-size``/``--num-pages``), and
+``--prefix-cache`` adds cross-request prefix reuse — prompts opening with an
+already-cached system prompt skip its prefill and copy-on-write diverge.
+
 Overload control (docs/SERVING.md): ``--priority interactive|batch`` tags
 every request's shedding class, ``--admission-margin`` scales the
 feasibility floor the fleet refuses infeasible deadlines against (0
@@ -52,7 +57,10 @@ def build_fleet(cfg, policy_name: str, replicas: int = 2,
                 prefill_chunk_tokens: int = 32,
                 step_slo_ms: float = 0.0,
                 admission_margin: float = 0.0,
-                brownout: bool = False) -> ServingFleet:
+                brownout: bool = False,
+                paged: bool = False, page_size: int = 16,
+                num_pages: int = 0,
+                prefix_cache: bool = False) -> ServingFleet:
     key = jax.random.PRNGKey(0)
     params = model_lib.init_model(key, cfg)
     fleet = ServingFleet(make_policy(policy_name), source="replica0",
@@ -63,12 +71,18 @@ def build_fleet(cfg, policy_name: str, replicas: int = 2,
                       capacity=capacity,
                       prefill_chunk_tokens=prefill_chunk_tokens,
                       step_slo_ms=step_slo_ms,
-                      brownout=BrownoutConfig() if brownout else None)
+                      brownout=BrownoutConfig() if brownout else None,
+                      paged=paged, page_size=page_size,
+                      num_pages=num_pages if num_pages > 0 else None,
+                      prefix_cache=prefix_cache)
         fleet.add_replica(rep)
+        paging = (f"paged KV ({rep.num_pages} pages x {rep.page_size} tok"
+                  f"{', prefix cache' if prefix_cache else ''})"
+                  if paged else "ring KV")
         print(f"replica{i}: warmup (compile) {rep.warmup_s:.2f}s — "
               f"cold-start paid up front; chunked prefill "
               f"{'on' if rep.prefill_caps['supported'] else 'off'} "
-              f"(budget ceiling {rep.prefill_chunk_tokens} tokens)")
+              f"(budget ceiling {rep.prefill_chunk_tokens} tokens); {paging}")
     return fleet
 
 
@@ -121,14 +135,31 @@ def main():
                     help="arm queue-pressure brownout on each replica "
                          "(reversible degradation under sustained load; "
                          "docs/SERVING.md)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: block-table lanes over a shared "
+                         "page pool instead of per-lane rings "
+                         "(docs/PAGING.md)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size (0 = slots x pages-per-lane, the "
+                         "ring-equivalent footprint)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix reuse: prompts sharing "
+                         "full cached blocks skip their prefill "
+                         "(global-attention stacks only; implies --paged)")
     args = ap.parse_args()
+    if args.prefix_cache:
+        args.paged = True
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     fleet = build_fleet(cfg, args.policy, replicas=args.replicas,
                         prefill_chunk_tokens=args.prefill_chunk_tokens,
                         step_slo_ms=args.step_slo_ms,
                         admission_margin=args.admission_margin,
-                        brownout=args.brownout)
+                        brownout=args.brownout, paged=args.paged,
+                        page_size=args.page_size, num_pages=args.num_pages,
+                        prefix_cache=args.prefix_cache)
 
     inj = None
     if args.chaos:

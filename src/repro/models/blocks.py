@@ -117,12 +117,22 @@ def init_block_cache(cfg: ModelConfig, kind: str, attn_kind: str,
 
 # --------------------------------------------------------------------- decode
 def apply_block_decode(p, x, cache, cfg: ModelConfig, kind: str, attn_kind: str,
-                       *, cache_index, num_groups: int = 1):
+                       *, cache_index, num_groups: int = 1, block_tables=None):
     """x: (B, 1, D).  Returns (y, new_cache, aux).
 
     ``cache_index`` is a scalar (all lanes at the same position) or a
     per-lane ``(B,)`` vector: lane b inserts its KV at ``cache_index[b]``
     and masks against its own length — the continuous-batching decode path.
+
+    With ``block_tables`` ((B, max_pages) int32 page ids, -1 = absent) an
+    attention block's cache is a **paged pool** ``{"k"/"v": (P, page,
+    Hkv, D), "pos": (P, page)}`` shared by all lanes instead of per-lane
+    rings: lane b's new KV is scattered into the pool row its table names
+    for position ``cache_index[b]`` and attention gathers through the
+    table (``ops.paged_decode_attention``).  A lane whose table slot is
+    -1 (freed lane) writes to the pool's dump row (the last row, which no
+    table ever references) so the batched step stays scatter-shaped
+    without corrupting live pages.
     """
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     new_cache = cache
@@ -130,7 +140,6 @@ def apply_block_decode(p, x, cache, cfg: ModelConfig, kind: str, attn_kind: str,
         b = x.shape[0]
         cache_index = jnp.asarray(cache_index, jnp.int32)
         idx = jnp.broadcast_to(cache_index, (b,))
-        n = cache["k"].shape[1]
         # project + rope at each lane's absolute position
         positions = idx[:, None]                               # (B, 1)
         q, k, v = attn_lib._project_qkv(p["attn"], h, cfg, positions, attn_kind)
@@ -139,6 +148,37 @@ def apply_block_decode(p, x, cache, cfg: ModelConfig, kind: str, attn_kind: str,
 
         from repro.sharding import context as shctx
         serving = shctx.get_serving_mesh()
+        if block_tables is not None:
+            tables = jnp.asarray(block_tables, jnp.int32)      # (B, maxp)
+            page = cache["k"].shape[1]
+            dump = cache["k"].shape[0] - 1
+            maxp = tables.shape[1]
+            lanes = jnp.arange(b)
+            entry = tables[lanes, jnp.minimum(idx // page, maxp - 1)]
+            rows = jnp.where(entry >= 0, entry, dump)          # (B,)
+            within = idx % page
+            if serving is not None:
+                from repro.serving.spmd_decode import spmd_paged_decode_attention
+                mesh, b_ax, s_ax = serving
+                out, k_cache, v_cache, pos = spmd_paged_decode_attention(
+                    mesh, q, cache["k"], cache["v"], cache["pos"], tables,
+                    k, v, rows, within, idx, window=window, scale=scale,
+                    softcap=cfg.logit_softcap, batch_axis=b_ax, seq_axis=s_ax)
+            else:
+                k_cache = cache["k"].at[rows, within].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                v_cache = cache["v"].at[rows, within].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                pos = cache["pos"].at[rows, within].set(idx)
+                out = ops.paged_decode_attention(
+                    q, k_cache, v_cache, pos, tables, cache_len=idx + 1,
+                    window=window, scale=scale, softcap=cfg.logit_softcap)
+            y = jnp.einsum("bshk,hkd->bsd", out,
+                           p["attn"]["wo"].astype(x.dtype))
+            x = x + y
+            x, aux = _channel_mix(p, x, cfg, kind, num_groups)
+            return x, {"k": k_cache, "v": v_cache, "pos": pos}, aux
+        n = cache["k"].shape[1]
         if serving is not None:
             # explicitly distributed split-S flash-decode (§Perf iter 2);
             # the per-lane (B,) index vector goes straight down — scalar

@@ -155,15 +155,51 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, Any]:
     return {"periods": periods, "tail": tail}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, capacity: int,
+                     num_pages: int, page_size: int) -> Dict[str, Any]:
+    """Like ``init_cache`` but attention KV lives in shared **page pools**
+    instead of per-lane rings: every attention layer holds ``{"k"/"v":
+    (num_pages + 1, page_size, Hkv, D), "pos": (num_pages + 1, page_size)}``
+    indexed through per-lane block tables (see ``apply_block_decode``).
+    The extra last row is the write dump for lanes with no page mapped.
+    Recurrent / cross leaves keep their per-lane ``batch``-leading layout —
+    only KV is paged."""
+    kinds = cfg.period_kinds()
+    p_len, reps = cfg.pattern_period, cfg.num_periods
+    hd, hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+
+    def one(kind, akind):
+        if kind == ATTN:
+            return {
+                "k": jnp.zeros((num_pages + 1, page_size, hkv, hd), cfg.dtype),
+                "v": jnp.zeros((num_pages + 1, page_size, hkv, hd), cfg.dtype),
+                "pos": jnp.full((num_pages + 1, page_size), -1, jnp.int32),
+            }
+        return blk.init_block_cache(cfg, kind, akind, batch, capacity)
+
+    periods = tuple(
+        jax.tree.map(lambda x: jnp.broadcast_to(x, (reps,) + x.shape),
+                     one(k, a))
+        for (k, a) in kinds
+    )
+    tail = tuple(one(k, a) for (k, a) in cfg.tail_kinds())
+    return {"periods": periods, "tail": tail}
+
+
 # ---------------------------------------------------------------------- decode
 def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
-                *, num_groups: int = 1) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+                *, num_groups: int = 1, block_tables=None
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """tokens: (B, 1) int32 (or (B, 1, d) embeddings).  One decode step:
     inserts KV at ``cache_index`` and predicts the next token's logits.
 
     ``cache_index`` is a scalar (all lanes aligned) or a per-lane ``(B,)``
     vector — the continuous-batching path, where every lane of the batch
-    decodes at its own position in its own KV history."""
+    decodes at its own position in its own KV history.
+
+    ``block_tables`` ((B, max_pages) int32, -1 = absent) switches attention
+    layers to the paged-pool cache layout from ``init_paged_cache``; the
+    same table indexes every attention layer's pool."""
     if tokens.ndim == 2:
         x = lyr.embed(params["embed"], tokens, cfg)
     else:
@@ -177,7 +213,8 @@ def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
         for si, (kind, akind) in enumerate(period_kinds):
             x, nc, _ = blk.apply_block_decode(
                 slot_params[si], x, slot_caches[si], cfg, kind, akind,
-                cache_index=cache_index, num_groups=num_groups)
+                cache_index=cache_index, num_groups=num_groups,
+                block_tables=block_tables)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -203,12 +240,156 @@ def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
     for ti, (kind, akind) in enumerate(cfg.tail_kinds()):
         x, nc, _ = blk.apply_block_decode(
             params["tail"][ti], x, cache["tail"][ti], cfg, kind, akind,
-            cache_index=cache_index, num_groups=num_groups)
+            cache_index=cache_index, num_groups=num_groups,
+            block_tables=block_tables)
         new_tail.append(nc)
 
     x = lyr.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lyr.logits_head(params["embed"], x, cfg, params.get("head"))
     return logits, {"periods": new_periods, "tail": tuple(new_tail)}
+
+
+# ----------------------------------------------------------- paged lane moves
+def paged_commit(cache, lane_cache, lane, table_row, from_pos,
+                 cfg: ModelConfig, page_size: int) -> Dict[str, Any]:
+    """Install a finished lane prefill into the paged cache.
+
+    ``lane_cache`` is the private B=1 *ring* cache chunked prefill filled
+    (``init_cache(cfg, 1, capacity)``): attention rings are scattered into
+    the page pools through ``table_row`` ((max_pages,) int32) — ring entry
+    at absolute position ``p`` lands in pool row ``table_row[p // page]``
+    slot ``p % page`` — while recurrent / cross leaves splice into batch
+    row ``lane`` exactly like the ring engine's insert.  Entries with
+    ``p < from_pos`` are routed to the dump row instead: those positions
+    live in *shared* prefix pages another lane (or the prefix cache) may
+    be reading, and a commit must never mutate a page it does not own.
+    """
+    maxp = table_row.shape[0]
+    lane = jnp.asarray(lane, jnp.int32)
+    from_pos = jnp.asarray(from_pos, jnp.int32)
+
+    def commit_attn(pk, pv, pp, rk, rv, rp):
+        dump = pk.shape[0] - 1
+        p = rp[0]                                          # (n,) ring positions
+        valid = (p >= 0) & (p >= from_pos)
+        slot = jnp.minimum(jnp.maximum(p, 0) // page_size, maxp - 1)
+        rows = jnp.where(valid, table_row[slot], dump)
+        rows = jnp.where(rows >= 0, rows, dump)
+        within = jnp.maximum(p, 0) % page_size
+        pk = pk.at[rows, within].set(rk[0].astype(pk.dtype))
+        pv = pv.at[rows, within].set(rv[0].astype(pv.dtype))
+        pp = pp.at[rows, within].set(p)
+        return pk, pv, pp
+
+    def commit_block(kind, block, ring, stacked):
+        if kind == ATTN:
+            # period leaves carry a leading reps axis: vmap the per-layer
+            # scatter over it (every rep shares the lane's one table row)
+            if stacked:
+                k, v, pos = jax.vmap(commit_attn)(
+                    block["k"], block["v"], block["pos"],
+                    ring["k"], ring["v"], ring["pos"])
+            else:
+                k, v, pos = commit_attn(block["k"], block["v"], block["pos"],
+                                        ring["k"], ring["v"], ring["pos"])
+            return {"k": k, "v": v, "pos": pos}
+        axis = 1 if stacked else 0
+        return jax.tree.map(
+            lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                full, part.astype(full.dtype), lane, axis=axis),
+            block, ring)
+
+    new_periods = tuple(
+        commit_block(kind, cache["periods"][si], lane_cache["periods"][si],
+                     True)
+        for si, (kind, akind) in enumerate(cfg.period_kinds()))
+    new_tail = tuple(
+        commit_block(kind, cache["tail"][ti], lane_cache["tail"][ti], False)
+        for ti, (kind, akind) in enumerate(cfg.tail_kinds()))
+    return {"periods": new_periods, "tail": new_tail}
+
+
+def paged_restore(cache, lane_cache, table_row, matched,
+                  cfg: ModelConfig, page_size: int) -> Dict[str, Any]:
+    """Fill a fresh B=1 prefill ring from cached prefix pages.
+
+    The inverse of ``paged_commit``: ring slot ``s`` receives the pool
+    entry for the absolute position the ring would hold after prefilling
+    ``matched`` tokens — ``p = s + ((matched - 1 - s) // n) * n`` (the
+    newest in-ring position congruent to ``s`` mod the ring length), valid
+    while ``0 <= p < matched``.  Suffix chunk prefill then continues from
+    ``start = matched`` as if those tokens had just been computed.
+    Recurrent leaves are left untouched (a recurrent state cannot be
+    restored from KV pages — the engine gates prefix reuse to
+    attention-only stacks)."""
+    maxp = table_row.shape[0]
+    matched = jnp.asarray(matched, jnp.int32)
+
+    def restore_attn(pk, pv, pp, rk, rv, rp):
+        n = rk.shape[1]
+        s = jnp.arange(n, dtype=jnp.int32)
+        p = s + ((matched - 1 - s) // n) * n
+        valid = (p >= 0) & (p < matched)
+        sp = jnp.where(valid, p, 0)
+        rows = table_row[jnp.minimum(sp // page_size, maxp - 1)]
+        rows = jnp.where(valid & (rows >= 0), rows, pk.shape[0] - 1)
+        gk = pk[rows, sp % page_size]                       # (n, hkv, hd)
+        gv = pv[rows, sp % page_size]
+        rk = jnp.where(valid[:, None, None], gk.astype(rk.dtype), rk[0])[None]
+        rv = jnp.where(valid[:, None, None], gv.astype(rv.dtype), rv[0])[None]
+        rp = jnp.where(valid, p, -1)[None]
+        return rk, rv, rp
+
+    new_periods = []
+    for si, (kind, akind) in enumerate(cfg.period_kinds()):
+        ring = lane_cache["periods"][si]
+        if kind != ATTN:
+            new_periods.append(ring)
+            continue
+        pool = cache["periods"][si]
+        k, v, pos = jax.vmap(restore_attn)(
+            pool["k"], pool["v"], pool["pos"],
+            ring["k"], ring["v"], ring["pos"])
+        new_periods.append({"k": k, "v": v, "pos": pos})
+    new_tail = []
+    for ti, (kind, akind) in enumerate(cfg.tail_kinds()):
+        ring = lane_cache["tail"][ti]
+        if kind != ATTN:
+            new_tail.append(ring)
+            continue
+        pool = cache["tail"][ti]
+        k, v, pos = restore_attn(pool["k"], pool["v"], pool["pos"],
+                                 ring["k"], ring["v"], ring["pos"])
+        new_tail.append({"k": k, "v": v, "pos": pos})
+    return {"periods": tuple(new_periods), "tail": tuple(new_tail)}
+
+
+def paged_copy_page(cache, src, dst, cfg: ModelConfig) -> Dict[str, Any]:
+    """Copy pool row ``src`` -> ``dst`` in every attention layer's pools —
+    the device half of copy-on-write (the allocator half decides *when*)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def copy(leaf, stacked):
+        if stacked:
+            row = jax.lax.dynamic_index_in_dim(leaf, src, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(leaf, row, dst, axis=1)
+        row = jax.lax.dynamic_index_in_dim(leaf, src, axis=0)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, row, dst, axis=0)
+
+    new_periods = []
+    for si, (kind, akind) in enumerate(cfg.period_kinds()):
+        block = cache["periods"][si]
+        if kind == ATTN:
+            block = jax.tree.map(lambda l: copy(l, True), block)
+        new_periods.append(block)
+    new_tail = []
+    for ti, (kind, akind) in enumerate(cfg.tail_kinds()):
+        block = cache["tail"][ti]
+        if kind == ATTN:
+            block = jax.tree.map(lambda l: copy(l, False), block)
+        new_tail.append(block)
+    return {"periods": tuple(new_periods), "tail": tuple(new_tail)}
 
 
 # ------------------------------------------------------------ chunked prefill

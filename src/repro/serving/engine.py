@@ -73,6 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import config as cfg_lib
 from repro.common.config import ModelConfig
 from repro.core.admission import admit
 from repro.core.latency import (NodeState, Task, predict_process_ms,
@@ -85,6 +86,7 @@ from repro.models import model as model_lib
 from repro.serving import sampling as sampling_lib
 from repro.serving.overload import (BrownoutConfig, BrownoutController,
                                     CircuitBreaker, priority_rank)
+from repro.serving.paging import PageAllocator, PrefixCache
 
 log = logging.getLogger(__name__)
 
@@ -217,7 +219,7 @@ class _Job:
 
     __slots__ = ("req", "lane", "lane_cache", "consumed", "out", "remaining",
                  "done", "key", "stops", "error", "order", "first_ms",
-                 "degraded")
+                 "degraded", "pages", "matched", "cow")
 
     def __init__(self, req: Request):
         self.req = req
@@ -234,6 +236,13 @@ class _Job:
         self.order: Tuple[int, float, int] = (0, 0.0, 0)
         self.first_ms = 0.0             # wall-clock of the first token (TTFT)
         self.degraded = False           # admitted under brownout clamping
+        # paged mode: position-ordered KV pages this job holds a ref on
+        # (matched prefix pages first, then fresh allocations), the number
+        # of prompt tokens restored from the prefix cache, and a pending
+        # (src, dst) copy-on-write the prefill path must apply on-device
+        self.pages: List[int] = []
+        self.matched = 0
+        self.cow: Optional[Tuple[int, int]] = None
         # per-lane PRNG root: sampled requests get a key derived only from
         # the request (never from batch state), split once per token
         self.key = (sampling_lib.make_lane_key(
@@ -288,6 +297,20 @@ class Replica:
       shrinks so the measured per-token chunk cost fits the slack the
       SLO leaves over the live step-time EWMA at the current occupancy
       (``budget_tokens``); ``0`` (default) always grants the ceiling;
+    * ``paged`` (+ ``page_size``/``num_pages``/``prefix_cache``) —
+      replace the per-lane contiguous KV rings with **block tables over a
+      shared page pool** (docs/PAGING.md): lane capacity is no longer
+      pre-carved per slot, so short requests hold only the pages they
+      touch and the same memory admits more concurrent lanes.  Admission
+      reserves a request's pages all-or-nothing (reclaiming LRU
+      unreferenced prefix pages on shortage; the EDF head waits while
+      live lanes still hold pages, and is shed when nothing reclaimable
+      can cover it).  With ``prefix_cache`` (attention-only, full-ring
+      stacks) prompts sharing page-aligned prefixes — a fleet-wide system
+      prompt — are prefilled once: later requests ref-count the cached
+      pages, restore their prefill ring from them, and copy-on-write the
+      one page they must recompute into.  Token streams are bit-identical
+      to the ring engine (test-enforced for dense + recurrent stacks).
     * ``serving_mesh`` (+ ``mesh_batch_axis``/``mesh_seq_axis``) — when
       set, every decode step runs the explicitly distributed split-S
       flash-decode over that mesh (``repro.serving.spmd_decode``) with
@@ -322,6 +345,9 @@ class Replica:
                  prefill_chunk_tokens: int = 32, step_slo_ms: float = 0.0,
                  max_queue: Optional[int] = None,
                  brownout: Optional[BrownoutConfig] = None,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
                  serving_mesh=None,
                  mesh_batch_axis: Optional[str] = "data",
                  mesh_seq_axis: str = "model"):
@@ -353,6 +379,42 @@ class Replica:
         # the ceiling IS the widest bucket: a non-power-of-two request
         # rounds down so the advertised budget is actually launchable
         self.prefill_chunk_tokens = self._chunk_buckets[-1]
+        # ---- paged KV mode: block tables over a shared page pool ----
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.cow_copies = 0             # COW page copies performed
+        self.prefill_chunks = 0         # chunk launches (all modes)
+        self.prefilled_tokens = 0       # prompt tokens actually computed
+        if self.paged:
+            if not self.prefill_caps["supported"]:
+                raise ValueError(
+                    f"replica {name}: paged KV requires chunked prefill "
+                    "(cross-attention stacks keep the ring engine)")
+            if self.page_size < 1:
+                raise ValueError(f"page_size={page_size} < 1")
+            self._max_pages_per_lane = -(-capacity // self.page_size)
+            self.num_pages = (int(num_pages) if num_pages is not None
+                              else slots * self._max_pages_per_lane)
+            if self.num_pages < self._max_pages_per_lane:
+                raise ValueError(
+                    f"replica {name}: num_pages={self.num_pages} cannot "
+                    f"hold even one full lane "
+                    f"({self._max_pages_per_lane} pages)")
+            self._alloc = PageAllocator(self.num_pages)
+            self._prefix: Optional[PrefixCache] = None
+            if prefix_cache:
+                if not self._prefix_reuse_ok():
+                    raise ValueError(
+                        f"replica {name}: prefix_cache requires an "
+                        "attention-only stack whose every ring holds the "
+                        "full capacity (recurrent state and windowed rings "
+                        "cannot be restored from prefix pages)")
+                self._prefix = PrefixCache(self._alloc, self.page_size)
+        else:
+            self._max_pages_per_lane = 0
+            self.num_pages = 0
+            self._alloc = None
+            self._prefix = None
         self.serving_mesh = serving_mesh
         self._mesh_axes = (mesh_batch_axis, mesh_seq_axis)
         # UP loop: set by ServingFleet.add_replica / profile_replica; the
@@ -393,10 +455,30 @@ class Replica:
         self._step_sampled = jax.jit(self._step_sampled_impl)
         self._sample_first = jax.jit(sampling_lib.sample_lane_tokens)
         self._insert = jax.jit(self._insert_impl)
+        if self.paged:
+            ps = self.page_size
+            self._step_paged = jax.jit(self._step_paged_impl)
+            self._step_sampled_paged = jax.jit(self._step_sampled_paged_impl)
+            self._commit = jax.jit(
+                lambda c, lc, lane, row, fp: model_lib.paged_commit(
+                    c, lc, lane, row, fp, cfg, ps))
+            self._restore = jax.jit(
+                lambda c, lc, row, m: model_lib.paged_restore(
+                    c, lc, row, m, cfg, ps))
+            self._copy_page = jax.jit(
+                lambda c, s, d: model_lib.paged_copy_page(c, s, d, cfg))
 
         # persistent batched decode state (device) + tiny host mirrors:
         # next token, KV index, PRNG key and sampling knobs per lane
-        self._cache = model_lib.init_cache(cfg, slots, capacity)
+        # (paged mode adds the host block-table mirror: row j is lane j's
+        # position-ordered page list, -1 = absent)
+        if self.paged:
+            self._cache = model_lib.init_paged_cache(
+                cfg, slots, capacity, self.num_pages, self.page_size)
+            self._tables = np.full((slots, self._max_pages_per_lane), -1,
+                                   np.int32)
+        else:
+            self._cache = model_lib.init_cache(cfg, slots, capacity)
         self._tok = np.zeros((slots, 1), np.int32)
         self._idx = np.zeros((slots,), np.int32)
         self._keys = np.zeros((slots, 2), np.uint32)
@@ -417,25 +499,53 @@ class Replica:
                     _, lane0 = self._prefill_chunk(
                         params, lane0, jnp.zeros((1, w), jnp.int32), start)
                     start += w
-            self._cache = self._insert(self._cache, lane_cache, 0)
-            nxt, self._cache = self._step(params, self._cache,
-                                          jnp.asarray(self._tok),
-                                          jnp.asarray(self._idx))
-            nxt.block_until_ready()
-            # warm the sampled step + the B=1 first-token sampler too:
-            # a sampled request must not pay a compile on the request path
-            nxt, keys, self._cache = self._step_sampled(
-                params, self._cache, jnp.asarray(self._tok),
-                jnp.asarray(self._idx), jnp.asarray(self._keys),
-                jnp.asarray(self._temp), jnp.asarray(self._topk),
-                jnp.asarray(self._topp))
-            nxt.block_until_ready()
+            if self.paged:
+                # paged executables: COW copy, prefix restore, ring->pool
+                # commit, both decode steps — warmed against an all-dump
+                # table (no page mapped) so nothing real is written
+                warm_row = jnp.full((self._max_pages_per_lane,), -1,
+                                    jnp.int32)
+                warm_tables = jnp.full((slots, self._max_pages_per_lane),
+                                       -1, jnp.int32)
+                self._cache = self._copy_page(self._cache, 0, 0)
+                lane0 = self._restore(self._cache, lane0, warm_row, 0)
+                self._cache = self._commit(self._cache, lane0, 0,
+                                           warm_row, 0)
+                nxt, self._cache = self._step_paged(
+                    params, self._cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._idx), warm_tables)
+                nxt.block_until_ready()
+                nxt, keys, self._cache = self._step_sampled_paged(
+                    params, self._cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._idx), jnp.asarray(self._keys),
+                    jnp.asarray(self._temp), jnp.asarray(self._topk),
+                    jnp.asarray(self._topp), warm_tables)
+                nxt.block_until_ready()
+            else:
+                self._cache = self._insert(self._cache, lane_cache, 0)
+                nxt, self._cache = self._step(params, self._cache,
+                                              jnp.asarray(self._tok),
+                                              jnp.asarray(self._idx))
+                nxt.block_until_ready()
+                # warm the sampled step + the B=1 first-token sampler too:
+                # a sampled request must not pay a compile on the request
+                # path
+                nxt, keys, self._cache = self._step_sampled(
+                    params, self._cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._idx), jnp.asarray(self._keys),
+                    jnp.asarray(self._temp), jnp.asarray(self._topk),
+                    jnp.asarray(self._topp))
+                nxt.block_until_ready()
             self._sample_first(
                 jnp.zeros((1, 2), jnp.uint32),
                 jnp.zeros((1, cfg.vocab_size), jnp.float32),
                 jnp.ones((1,), jnp.float32), jnp.zeros((1,), jnp.int32),
                 jnp.ones((1,), jnp.float32))[1].block_until_ready()
-            self._cache = model_lib.init_cache(cfg, slots, capacity)
+            if self.paged:
+                self._cache = model_lib.init_paged_cache(
+                    cfg, slots, capacity, self.num_pages, self.page_size)
+            else:
+                self._cache = model_lib.init_cache(cfg, slots, capacity)
         self.warmup_s = time.perf_counter() - t0
 
         self._thread = threading.Thread(
@@ -490,6 +600,134 @@ class Replica:
             "tail": jax.tree.map(upd(0), cache["tail"], lane_cache["tail"]),
         }
 
+    def _step_paged_impl(self, params, cache, tok, idx, tables):
+        """Greedy decode step over the paged pools: identical to
+        ``_step_impl`` except attention reads/writes route through the
+        per-lane block tables instead of per-lane rings."""
+        logits, cache = model_lib.decode_step(params, cache, tok, idx,
+                                              self.cfg, block_tables=tables)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    def _step_sampled_paged_impl(self, params, cache, tok, idx, keys, temp,
+                                 topk, topp, tables):
+        logits, cache = model_lib.decode_step(params, cache, tok, idx,
+                                              self.cfg, block_tables=tables)
+        keys, nxt = sampling_lib.sample_lane_tokens(keys, logits[:, -1],
+                                                    temp, topk, topp)
+        return nxt, keys, cache
+
+    # ------------------------------------------------------------ paged KV
+    def _prefix_reuse_ok(self) -> bool:
+        """Prefix-page reuse restores a lane's prefill ring from pool
+        pages, which is only faithful when every layer's decode state IS
+        its KV ring over the full history: attention-only stacks whose
+        rings hold the full capacity.  A recurrent layer's state cannot be
+        rebuilt from KV pages, and a windowed ring commits only its last
+        ``window`` positions — older pool entries would be unwritten."""
+        kinds = list(self.cfg.period_kinds()) + list(self.cfg.tail_kinds())
+        for kind, akind in kinds:
+            if kind != cfg_lib.ATTN:
+                return False
+            if (akind == cfg_lib.LOCAL and self.cfg.sliding_window
+                    and self.cfg.sliding_window < self.capacity):
+                return False
+        return True
+
+    def _pages_for(self, n: int, remaining: int) -> int:
+        """Pages covering every KV position this request can write:
+        prompt 0..n-1 plus one per decode step after the prefill-emitted
+        first token (positions n .. n+remaining-2)."""
+        total = min(n + max(remaining, 1) - 1, self.capacity)
+        return -(-total // self.page_size)
+
+    def _reserve_pages_locked(self, job: _Job) -> bool:
+        """All-or-nothing page reservation for ``job`` (caller holds the
+        lock).  The prefix cache is consulted first — matched full blocks
+        arrive as shared ref-counted pages — then the remainder is
+        allocated from the free list, reclaiming LRU unreferenced prefix
+        pages on shortage.  On failure every matched ref is dropped again
+        (defer, not leak).  A full-prompt hit swaps the last matched page
+        for a private copy NOW (allocator side; the device copy runs on
+        the prefill path) because the final prompt position must be
+        recomputed into a page this lane owns — the cached original stays
+        shared."""
+        prompt = job.req.prompt
+        n = len(prompt)
+        matched, pages = (self._prefix.match(prompt)
+                          if self._prefix is not None else (0, []))
+        need = self._pages_for(n, job.remaining) - len(pages)
+        if matched >= n:
+            need += 1               # COW page for the recomputed last token
+        fresh = [] if need <= 0 else self._alloc.alloc(need)
+        if fresh is None and self._prefix is not None:
+            self._prefix.reclaim(need - self._alloc.free_count)
+            fresh = self._alloc.alloc(need)
+        if fresh is None:
+            for p in pages:
+                self._alloc.decref(p)
+            return False
+        job.cow = None
+        if matched >= n:
+            # full hit: position n-1 lives in the last matched page, which
+            # is shared by definition (the cache holds its own ref) —
+            # install the budgeted private copy in its place
+            dst = fresh.pop(0)
+            src = pages[-1]
+            self._alloc.decref(src)     # drop our shared ref; cache keeps its
+            pages[-1] = dst             # own — the entry stays reusable
+            job.cow = (src, dst)
+            self.cow_copies += 1
+        job.matched = min(matched, n - 1)
+        job.consumed = job.matched
+        job.pages = pages + fresh
+        return True
+
+    def _reserve_could_succeed_locked(self) -> bool:
+        """True while some live lane or mid-prefill job still holds pages
+        that will return to the pool — the head-of-line wait is then
+        productive.  When nothing live holds pages, a failed reservation
+        can never succeed (everything reclaimable was already reclaimed)
+        and admission must shed instead of spinning."""
+        if any(j is not None and j.pages for j in self._lanes):
+            return True
+        return any(j.pages for j in self._prefilling)
+
+    def _release_pages_locked(self, job: _Job) -> None:
+        """Drop ``job``'s page references and clear its block-table row
+        (caller holds the lock).  Shared prefix pages lose only this
+        lane's ref — the prefix cache's own ref keeps them resident until
+        it evicts them under pressure."""
+        if not self.paged:
+            return
+        for p in job.pages:
+            self._alloc.decref(p)
+        job.pages = []
+        if 0 <= job.lane < self.slots:
+            self._tables[job.lane, :] = -1
+
+    def _job_row(self, job: _Job) -> jnp.ndarray:
+        """Block-table row for a mid-prefill job, built from ``job.pages``
+        rather than read from ``self._tables`` — the shared table only
+        carries rows for *installed* lanes (see ``_admit_locked``)."""
+        row = np.full((self._max_pages_per_lane,), -1, np.int32)
+        row[:len(job.pages)] = job.pages
+        return jnp.asarray(row)
+
+    def _update_paged_telemetry_locked(self) -> None:
+        """Refresh the Update-Profile paged fields the heartbeat snapshots:
+        the prefix hit rate (discounts T_que's interleave charge for
+        shared prompts) and free + reclaimable pages (admission
+        headroom)."""
+        prof = self.profile
+        if prof is None or not self.paged:
+            return
+        free = float(self._alloc.free_count)
+        if self._prefix is not None:
+            free += float(self._prefix.reclaimable())
+            prof.prefix_hit_rate = self._prefix.hit_rate()
+        prof.free_pages = free
+
     # -------------------------------------------------------------- serving
     @property
     def browned_out(self) -> bool:
@@ -529,6 +767,18 @@ class Replica:
             # reject in the CALLER's thread: an empty prompt reaching the
             # decode thread would kill it and strand every other lane
             raise ValueError(f"request {req.request_id}: empty prompt")
+        if self.paged:
+            # paged lanes never wrap: every KV position needs a page, so a
+            # prompt past the capacity (or the chunked-prefill bound) can
+            # never be admitted here — refuse retryable, route elsewhere
+            bound = self.prefill_caps["max_prompt_tokens"]
+            limit = self.capacity if bound is None \
+                else min(self.capacity, bound)
+            if len(req.prompt) > limit:
+                raise ReplicaRefused(
+                    self.name,
+                    f"replica {self.name}: prompt of {len(req.prompt)} "
+                    f"tokens exceeds paged KV capacity {limit}")
         job = _Job(req)
         now = time.monotonic() * 1e3
         born = req.created_ms or now
@@ -543,6 +793,19 @@ class Replica:
                     and job.remaining > self.brownout.cfg.max_new_tokens_cap):
                 job.remaining = self.brownout.cfg.max_new_tokens_cap
                 job.degraded = True
+            if self.paged:
+                # no wrap past the last page: the decode budget is clamped
+                # so positions stay within the paged capacity, and a
+                # request whose page footprint exceeds the whole pool is
+                # refused — even an empty replica could never admit it
+                job.remaining = min(job.remaining,
+                                    self.capacity - len(req.prompt) + 1)
+                need_max = self._pages_for(len(req.prompt), job.remaining)
+                if need_max > self.num_pages:
+                    raise ReplicaRefused(
+                        self.name,
+                        f"replica {self.name}: request needs {need_max} KV "
+                        f"pages; the pool holds {self.num_pages}")
             self._seq += 1
             job.order = (priority_rank(req.priority),
                          born + req.deadline_ms, self._seq)
@@ -667,6 +930,8 @@ class Replica:
             self._pending.clear()
             self._prefilling.clear()
             self._lanes = [None] * self.slots
+            for j in jobs:
+                self._release_pages_locked(j)
         for j in jobs:
             j.error = ReplicaDead(
                 self.name, f"replica {self.name}: {reason}", list(j.out))
@@ -711,6 +976,7 @@ class Replica:
                                 + [j for j in self._lanes if j is not None])
                     self._lanes = [None] * self.slots
                     for j in stranded:
+                        self._release_pages_locked(j)
                         j.done.set()    # callers get whatever decoded so far
                     return
                 # shed: queued jobs whose predicted wait already exceeds
@@ -718,16 +984,9 @@ class Replica:
                 # now (lowest priority / latest deadline first, since the
                 # queue is ordered and position inflates predicted wait)
                 shed = self._shed_sweep_locked(time.monotonic() * 1e3)
-                # admit: waiting requests claim free lanes
-                reserved = {j.lane for j in self._prefilling}
-                for lane in range(self.slots):
-                    if not self._pending:
-                        break
-                    if self._lanes[lane] is None and lane not in reserved:
-                        job = self._pending.pop(0)
-                        job.lane = lane
-                        reserved.add(lane)
-                        self._prefilling.append(job)
+                # admit: waiting requests claim free lanes (paged mode also
+                # reserves their KV pages all-or-nothing)
+                shed += self._admit_locked()
                 active = [i for i, j in enumerate(self._lanes)
                           if j is not None]
                 # snapshot the prefill head under the lock: fail_inflight
@@ -788,6 +1047,48 @@ class Replica:
                     f"deadline slack)", list(job.out), retry_after_ms=hint)
         return shed
 
+    def _admit_locked(self) -> List[_Job]:
+        """Claim free lanes for waiting requests in queue order (caller
+        holds the lock).  In paged mode a lane claim must also reserve the
+        request's KV pages all-or-nothing: on shortage the EDF head
+        *waits* head-of-line while any live lane still holds pages that
+        will free (admitting a later, smaller request over the head would
+        invert the deadline order), and is shed — accounted, retryable-
+        after — when nothing reclaimable could ever cover it.  Returns the
+        shed jobs; the caller sets their done events outside the lock."""
+        shed: List[_Job] = []
+        reserved = {j.lane for j in self._prefilling}
+        free = [l for l in range(self.slots)
+                if self._lanes[l] is None and l not in reserved]
+        while free and self._pending:
+            job = self._pending[0]
+            if self.paged and not self._reserve_pages_locked(job):
+                if self._reserve_could_succeed_locked():
+                    break           # head-of-line wait: pages will free
+                self._pending.pop(0)
+                job.error = ReplicaSaturated(
+                    self.name,
+                    f"replica {self.name}: request {job.req.request_id} "
+                    f"needs more KV pages than are reclaimable",
+                    list(job.out),
+                    retry_after_ms=self._retry_after_hint())
+                shed.append(job)
+                continue
+            self._pending.pop(0)
+            lane = free.pop(0)
+            job.lane = lane
+            # NOTE: the lane's block-table row is NOT published here.  The
+            # batched decode step processes every lane slot (ghost lanes'
+            # tokens are discarded host-side), so a mid-prefill lane whose
+            # row were already visible would be ghost-written at its stale
+            # index *through the table* — and when the row's early entries
+            # are shared prefix pages, that scribble lands in the cached
+            # system prompt.  The row goes device-visible only at install
+            # time in ``_advance_prefill``; until then commits and restores
+            # build the row locally from ``job.pages``.
+            self._prefilling.append(job)
+        return shed
+
     def budget_tokens(self, occupancy: int) -> int:
         """SLO-adaptive prefill budget for one interleave slot: how many
         prompt tokens may prefill between this decode step and the next.
@@ -828,10 +1129,25 @@ class Replica:
             logits, job.lane_cache = self._prefill(
                 self.params, jnp.asarray(prompt)[None, :])
             job.consumed = n
+            self.prefilled_tokens += n
         else:
             if job.lane_cache is None:
                 job.lane_cache = model_lib.init_cache(self.cfg, 1,
                                                       self.capacity)
+                if self.paged and job.cow is not None:
+                    # device half of the full-hit COW: materialize the
+                    # private copy before anything reads through the table
+                    # (the table row already points at the copy)
+                    src, dst = job.cow
+                    self._cache = self._copy_page(self._cache, src, dst)
+                    job.cow = None
+                if self.paged and job.matched > 0:
+                    # cached-prefix join: rebuild the prefill ring from the
+                    # matched pages; chunking resumes at start = matched as
+                    # if those tokens had just been computed
+                    job.lane_cache = self._restore(
+                        self._cache, job.lane_cache, self._job_row(job),
+                        job.matched)
             c = min(self.budget_tokens(occupancy), n - job.consumed)
             # largest bucket that fits the budget and the remaining prompt:
             # chunks stay exact (recurrent state never sees pad tokens) and
@@ -853,6 +1169,8 @@ class Replica:
                 prof.observe_prefill_chunk((time.perf_counter() - t0) * 1e3,
                                            tokens=w)
             job.consumed += w
+            self.prefill_chunks += 1
+            self.prefilled_tokens += w
         self._last_progress_ms = time.monotonic() * 1e3
         if job.consumed < n:
             return
@@ -870,7 +1188,17 @@ class Replica:
             job.key = np.asarray(keys[0], np.uint32)
         else:
             first = int(jnp.argmax(logits[0, -1]))
-        self._cache = self._insert(self._cache, job.lane_cache, job.lane)
+        if self.paged:
+            # scatter the finished ring into this lane's pages; positions
+            # below ``matched`` belong to shared prefix pages and are
+            # routed to the dump row (a commit never writes a page the
+            # lane does not own)
+            self._cache = self._commit(self._cache, job.lane_cache,
+                                       job.lane, self._job_row(job),
+                                       job.matched)
+        else:
+            self._cache = self._insert(self._cache, job.lane_cache,
+                                       job.lane)
         job.lane_cache = None
         lane = job.lane
         self._tok[lane, 0] = first
@@ -893,8 +1221,18 @@ class Replica:
                 self._prefilling.popleft()
             self._work.notify_all()         # wake drain() waiters
             if job.error is not None:
+                self._release_pages_locked(job)
                 return                      # failed/evicted mid-prefill:
                                             # never install a dead job
+            if self.paged and self._prefix is not None:
+                # publish this prompt's full blocks for later sharers; the
+                # cache adopts (increfs) pages it has not seen — existing
+                # hashes keep their cached page, so a full-hit COW copy
+                # stays private to this lane
+                full = n // self.page_size
+                if full > 0:
+                    self._prefix.register(prompt, job.pages[:full])
+            self._update_paged_telemetry_locked()
             if job.remaining > 0:
                 job.out.append(first)
                 job.first_ms = time.monotonic() * 1e3   # TTFT stamp
@@ -904,6 +1242,13 @@ class Replica:
             if job.remaining == 0:
                 finished = True
             else:
+                if self.paged:
+                    # publish the block-table row only now that the lane is
+                    # live: from here on the ghost-write invariant holds
+                    # (the lane's device index is current and every page
+                    # the row exposes below ``idx`` is already committed)
+                    self._tables[lane, :] = -1
+                    self._tables[lane, :len(job.pages)] = job.pages
                 self._lanes[lane] = job
         if finished:
             # the job never joins the batch (its one token came from
@@ -911,6 +1256,9 @@ class Replica:
             self._temp[lane] = 0.0
             self._topk[lane] = 0
             self._topp[lane] = 1.0
+            if self.paged:
+                with self._work:
+                    self._release_pages_locked(job)
             job.done.set()
 
     def _decode_step(self, active: List[int]) -> None:
@@ -920,11 +1268,18 @@ class Replica:
         # executable (greedy lanes still argmax inside it, and every
         # lane's key advances exactly once per step it is active)
         if any(self._temp[lane] > 0.0 for lane in active):
-            nxt, keys, self._cache = self._step_sampled(
-                self.params, self._cache, jnp.asarray(self._tok),
-                jnp.asarray(self._idx), jnp.asarray(self._keys),
-                jnp.asarray(self._temp), jnp.asarray(self._topk),
-                jnp.asarray(self._topp))
+            if self.paged:
+                nxt, keys, self._cache = self._step_sampled_paged(
+                    self.params, self._cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._idx), jnp.asarray(self._keys),
+                    jnp.asarray(self._temp), jnp.asarray(self._topk),
+                    jnp.asarray(self._topp), jnp.asarray(self._tables))
+            else:
+                nxt, keys, self._cache = self._step_sampled(
+                    self.params, self._cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._idx), jnp.asarray(self._keys),
+                    jnp.asarray(self._temp), jnp.asarray(self._topk),
+                    jnp.asarray(self._topp))
             # copy back keys for ACTIVE lanes only: a lane that joined
             # after `active` was snapshotted had this step's token
             # discarded, so its key must not consume this step's split —
@@ -932,6 +1287,10 @@ class Replica:
             keys_np = np.asarray(keys)
             for lane in active:
                 self._keys[lane] = keys_np[lane]
+        elif self.paged:
+            nxt, self._cache = self._step_paged(
+                self.params, self._cache, jnp.asarray(self._tok),
+                jnp.asarray(self._idx), jnp.asarray(self._tables))
         else:
             nxt, self._cache = self._step(self.params, self._cache,
                                           jnp.asarray(self._tok),
@@ -966,8 +1325,10 @@ class Replica:
                     self._temp[lane] = 0.0
                     self._topk[lane] = 0
                     self._topp[lane] = 1.0
+                    self._release_pages_locked(job)
                     finished.append(job)
             if finished:
+                self._update_paged_telemetry_locked()
                 self._work.notify_all()     # wake drain() waiters
         for job in finished:
             job.done.set()
@@ -1014,7 +1375,19 @@ def measure_step_curve(rep: Replica, steps_per_point: int = 6,
     Returns ``(occupancies, step_ms, prefill_chunk_ms)``.
     """
     with rep._mesh_scope():
-        cache = model_lib.init_cache(rep.cfg, rep.slots, rep.capacity)
+        paged = getattr(rep, "paged", False)
+        tables = None
+        if paged:
+            cache = model_lib.init_paged_cache(
+                rep.cfg, rep.slots, rep.capacity, rep.num_pages,
+                rep.page_size)
+            # scratch block tables: each lane mapped to its own page run
+            # (modulo the pool) so the timed step pays real gather/scatter
+            maxp = rep._max_pages_per_lane
+            t_np = np.arange(rep.slots * maxp, dtype=np.int32) % rep.num_pages
+            tables = jnp.asarray(t_np.reshape(rep.slots, maxp))
+        else:
+            cache = model_lib.init_cache(rep.cfg, rep.slots, rep.capacity)
         tok = jnp.zeros((rep.slots, 1), jnp.int32)
         pos = min(16, rep.capacity - 1)
         occs, step_ms = [], []
@@ -1024,7 +1397,11 @@ def measure_step_curve(rep: Replica, steps_per_point: int = 6,
             best = float("inf")
             for i in range(warmup_steps + steps_per_point):
                 t0 = time.perf_counter()
-                nxt, cache = rep._step(rep.params, cache, tok, idx)
+                if paged:
+                    nxt, cache = rep._step_paged(rep.params, cache, tok,
+                                                 idx, tables)
+                else:
+                    nxt, cache = rep._step(rep.params, cache, tok, idx)
                 nxt.block_until_ready()
                 dt = (time.perf_counter() - t0) * 1e3
                 if i >= warmup_steps:
@@ -1190,6 +1567,11 @@ class ServingFleet:
 
     def add_replica(self, rep: Replica, profile: Optional[AppProfile] = None,
                     link: Optional[LinkProfile] = None) -> None:
+        # a recycled name must not inherit the dead incarnation's MP-table
+        # record (profile, occupancy, paged telemetry): drop any stale row
+        # so the only state routing ever sees for the new process is its
+        # own first heartbeat
+        self.table.remove(rep.name)
         prof = profile or profile_replica(rep)
         rep.profile = prof              # decode loop feeds the UP loop
         dev = DeviceProfile(

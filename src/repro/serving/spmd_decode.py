@@ -182,3 +182,98 @@ def spmd_decode_attention(mesh, q, k_cache, v_cache, new_k, new_v, pos,
     )
     return fn(q, k_cache, v_cache, new_k, new_v, pos,
               jnp.asarray(cache_index, jnp.int32))
+
+
+def spmd_paged_decode_attention(mesh, q, k_pool, v_pool, pos_pool, tables,
+                                new_k, new_v, rows, within, cache_index, *,
+                                window: int = 0, scale: float,
+                                softcap: float = 0.0,
+                                batch_axis: Optional[str] = "data",
+                                seq_axis: str = "model"):
+    """Block-table decode under the mesh: page pools sharded over rows.
+
+    Pools ((P, page, Hkv, D) + (P, page) pos) shard their **row** axis over
+    ``seq_axis`` — pages replace the contiguous S chunks of
+    ``spmd_decode_attention``, so each rank owns a contiguous row range and
+    the same lse combine joins the partial softmaxes.  ``rows`` / ``within``
+    are each lane's pre-resolved write coordinates ((B,) int32, dump row
+    for absent table slots); ``tables`` is the (B, max_pages) block table.
+    Each rank keeps the scatter only for lanes whose row lands in its
+    range, attends over the pages *it* owns (table entries outside the
+    local range are masked), and psums (m, l, acc).
+
+    The batch dim stays replicated: every rank must see every lane's table
+    (pages are shared across lanes — sharding B would leave each batch
+    shard with a divergent pool replica after the write).
+    Requires ``P % mesh.shape[seq_axis] == 0`` (the engine rounds its page
+    count up to suit).
+    """
+    del batch_axis                       # lanes replicated: pools are shared
+    b, _, hq, d = q.shape
+    prows, page = k_pool.shape[0], k_pool.shape[1]
+    maxp = tables.shape[1]
+    n_seq = mesh.shape[seq_axis]
+    assert prows % n_seq == 0, (prows, n_seq)
+    p_loc = prows // n_seq
+
+    def body(q_l, k_l, v_l, pos_l, tbl, nk_l, nv_l, rows_g, within_g, idx):
+        rank = jax.lax.axis_index(seq_axis)
+        start = rank * p_loc
+        off = rows_g - start
+        in_range = jnp.logical_and(off >= 0, off < p_loc)    # (B,)
+        # route lanes whose row lives on another rank to a scratch row
+        # appended below the local slice (dropped after the scatter) — a
+        # where() over the scattered array would race a clipped stray
+        # write against a genuine one landing in the same cell
+        off_c = jnp.where(in_range, off, p_loc)
+        k_l = jnp.concatenate([k_l, jnp.zeros_like(k_l[:1])], 0).at[
+            off_c, within_g].set(nk_l[:, 0].astype(k_l.dtype))[:p_loc]
+        v_l = jnp.concatenate([v_l, jnp.zeros_like(v_l[:1])], 0).at[
+            off_c, within_g].set(nv_l[:, 0].astype(v_l.dtype))[:p_loc]
+        pos_l = jnp.concatenate([pos_l, jnp.zeros_like(pos_l[:1])], 0).at[
+            off_c, within_g].set(idx)[:p_loc]
+
+        # gather the locally-owned slice of every lane's table
+        e_off = tbl - start                                  # (B, maxp)
+        local = (tbl >= 0) & (e_off >= 0) & (e_off < p_loc)
+        safe = jnp.clip(e_off, 0, p_loc - 1)
+        k_g = k_l[safe].reshape(b, maxp * page, *k_l.shape[2:])
+        v_g = v_l[safe].reshape(b, maxp * page, *v_l.shape[2:])
+        pos_g = pos_l[safe].reshape(b, maxp * page)
+        expected = jnp.arange(maxp * page, dtype=jnp.int32)[None]
+        valid = (pos_g == expected) & (expected <= idx[:, None])
+        valid &= jnp.repeat(local, page, axis=1)
+        if window > 0:
+            valid &= expected > idx[:, None] - window
+        m, l, acc = _local_attend(q_l, k_g, v_g, valid, scale, softcap)
+
+        m_g = jax.lax.pmax(m, seq_axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, seq_axis)
+        acc_g = jax.lax.psum(acc * corr[..., None], seq_axis)
+        out = (acc_g / jnp.maximum(l_g, 1e-30)[..., None])
+        out = out.reshape(b, 1, hq, d).astype(q_l.dtype)
+        return out, k_l, v_l, pos_l
+
+    fn = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, None, None),          # q (replicated)
+                  P(seq_axis, None, None, None),      # k pool (rows sharded)
+                  P(seq_axis, None, None, None),      # v pool
+                  P(seq_axis, None),                  # pos pool
+                  P(None, None),                      # tables
+                  P(None, None, None, None),          # new k
+                  P(None, None, None, None),          # new v
+                  P(None), P(None), P(None)),         # rows, within, idx
+        out_specs=(P(None, None, None, None),
+                   P(seq_axis, None, None, None),
+                   P(seq_axis, None, None, None),
+                   P(seq_axis, None)),
+        check_vma=False,
+    )
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32).reshape(-1),
+                           (b,))
+    return fn(q, k_pool, v_pool, pos_pool,
+              jnp.asarray(tables, jnp.int32), new_k, new_v,
+              jnp.asarray(rows, jnp.int32), jnp.asarray(within, jnp.int32),
+              idx)

@@ -1,0 +1,606 @@
+"""Paged KV cache + prefix reuse: the paging test battery.
+
+Three tiers, cheapest first:
+
+1. **Property suite** (pure host, hypothesis): random alloc / free /
+   share / COW sequences against ``PageAllocator`` and ``PrefixCache``
+   never double-free, never leak, and keep the free-list/refcount
+   partition invariant (``check()``) at every step.
+2. **Token-identity goldens**: the paged engine is bit-identical to the
+   ring engine for dense (granite), pure-SSM (mamba2) and RG-LRU
+   (recurrentgemma) stacks — sequential, concurrent mid-stream joins,
+   and capacity/ring-wrap-length prompts.
+3. **Prefix-cache semantics**: N requests sharing a system prompt
+   prefill it exactly once (counted in ``prefilled_tokens``), a
+   full-prompt hit copy-on-writes its last block, eviction under page
+   pressure never frees a block a live lane references, and the
+   Update-Profile loop publishes honest paged telemetry.
+
+Plus the PR's fault-tolerance regression: a rejoin under a recycled
+node name must not inherit the dead incarnation's profile/page state.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    # deterministic local fallback; install requirements-dev.txt
+    # for real property-based coverage
+    from _hypothesis_fallback import given, settings, st
+
+from repro.serving.paging import PageAllocator, PagingError, PrefixCache
+
+
+# =====================================================================
+# 1. allocator / prefix-cache property suite (no device, no model)
+# =====================================================================
+
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(st.integers(0, 10_000), min_size=0, max_size=200),
+       num_pages=st.integers(1, 12))
+def test_allocator_random_ops_hold_invariants(ops, num_pages):
+    """Model-based random machine over alloc/incref/decref/COW: the
+    allocator's refcounts always equal the model's outstanding holds,
+    ``check()`` passes after every op, and releasing every hold returns
+    the pool to fully free — no leak, no double free."""
+    alloc = PageAllocator(num_pages)
+    held = []                            # our refs, with multiplicity
+    for op in ops:
+        kind, arg = op % 4, op // 4
+        if kind == 0:                    # alloc k pages (all-or-nothing)
+            k = arg % (num_pages + 2)
+            before = alloc.free_count
+            got = alloc.alloc(k)
+            if got is None:
+                assert k > before        # only refused for real shortage
+            else:
+                assert len(got) == k and alloc.free_count == before - k
+                held.extend(got)
+        elif kind == 1 and held:         # share (prefix incref)
+            p = held[arg % len(held)]
+            alloc.incref(p)
+            held.append(p)
+        elif kind == 2 and held:         # release one hold
+            p = held.pop(arg % len(held))
+            alloc.decref(p)
+        elif kind == 3 and held:         # COW gate before a write
+            i = arg % len(held)
+            p = held[i]
+            shared = alloc.refcount(p) > 1
+            try:
+                w, copied = alloc.ensure_writable(p)
+            except PagingError:
+                assert alloc.free_count == 0    # only fails w/o copy room
+                continue
+            assert copied == shared      # copy iff the page was shared
+            held[i] = w
+            assert alloc.refcount(w) >= 1
+        alloc.check()
+        for p in set(held):
+            assert alloc.refcount(p) == held.count(p)
+    for p in held:
+        alloc.decref(p)
+    alloc.check()
+    assert alloc.free_count == num_pages
+
+
+def test_double_free_and_bad_incref_raise():
+    alloc = PageAllocator(2)
+    (p,) = alloc.alloc(1)
+    assert alloc.decref(p) == 0
+    with pytest.raises(PagingError):
+        alloc.decref(p)                  # double free
+    with pytest.raises(PagingError):
+        alloc.incref(p)                  # incref of a free page
+    alloc.check()
+    assert alloc.free_count == 2
+
+
+def test_alloc_is_all_or_nothing():
+    alloc = PageAllocator(4)
+    a = alloc.alloc(3)
+    assert a is not None and alloc.free_count == 1
+    assert alloc.alloc(2) is None        # partial grant refused...
+    assert alloc.free_count == 1         # ...and the free list untouched
+    assert alloc.alloc(1) is not None
+
+
+def test_ensure_writable_copies_shared_keeps_exclusive():
+    alloc = PageAllocator(4)
+    (p,) = alloc.alloc(1)
+    w, copied = alloc.ensure_writable(p)
+    assert w == p and not copied         # exclusive: write in place
+    alloc.incref(p)                      # now shared (a second holder)
+    w, copied = alloc.ensure_writable(p)
+    assert copied and w != p
+    assert alloc.refcount(p) == 1 and alloc.refcount(w) == 1
+    alloc.check()
+
+
+@settings(max_examples=40, deadline=None)
+@given(prompts=st.lists(st.lists(st.integers(0, 3), min_size=0, max_size=20),
+                        min_size=1, max_size=8),
+       page_size=st.sampled_from([1, 2, 4]),
+       num_pages=st.integers(8, 24))
+def test_prefix_cache_random_workload_never_leaks(prompts, page_size,
+                                                 num_pages):
+    """Engine-shaped random workload over the prefix cache: match ->
+    alloc the uncached suffix -> register -> later release, with reclaim
+    under pressure.  Cached refcount is always 1 + live sharers; at the
+    end every page drains back to the free list."""
+    alloc = PageAllocator(num_pages)
+    cache = PrefixCache(alloc, page_size)
+    lanes = []                           # live lanes' page lists
+    for i, prompt in enumerate(prompts):
+        matched, pages = cache.match(prompt)
+        blocks = len(prompt) // page_size
+        need = blocks - len(pages)
+        fresh = alloc.alloc(need)
+        if fresh is None:
+            cache.reclaim(need - alloc.free_count)
+            fresh = alloc.alloc(need)
+        if fresh is None:                # genuinely out of pages: back out
+            for p in pages:
+                alloc.decref(p)
+            continue
+        pages = pages + fresh
+        if blocks:
+            cache.register(prompt, pages)
+        lanes.append(pages)
+        if i % 2 == 1 and lanes:         # retire an old lane mid-stream
+            for p in lanes.pop(0):
+                alloc.decref(p)
+        alloc.check()
+        for p in cache.cached_pages():
+            assert alloc.refcount(p) >= 1        # cache's own hold survives
+    for pages in lanes:
+        for p in pages:
+            alloc.decref(p)
+    cache.drop()
+    alloc.check()
+    assert alloc.free_count == num_pages
+
+
+def test_prefix_match_requires_full_chain_from_origin():
+    """Block keys are hash-chained from position 0: a prompt sharing only
+    a *later* block never matches it."""
+    alloc = PageAllocator(8)
+    cache = PrefixCache(alloc, page_size=2)
+    pages = alloc.alloc(2)
+    cache.register([1, 2, 3, 4], pages)
+    matched, got = cache.match([9, 9, 3, 4])     # same 2nd block, diff 1st
+    assert matched == 0 and got == []
+    matched, got = cache.match([1, 2, 3, 4])
+    assert matched == 4 and got == pages
+    for p in got + pages:
+        alloc.decref(p)
+    cache.drop()
+    alloc.check()
+
+
+def test_register_is_idempotent_across_sharers():
+    """N identical prompts converge on one cache entry per block; a
+    re-registration (even with a different private page, e.g. a COW
+    copy) adds nothing and leaks nothing."""
+    alloc = PageAllocator(8)
+    cache = PrefixCache(alloc, page_size=2)
+    a = alloc.alloc(2)
+    assert cache.register([5, 6, 7, 8], a) == 2
+    b = alloc.alloc(2)                   # a sharer's private pages
+    assert cache.register([5, 6, 7, 8], b) == 0
+    for p in b:
+        assert alloc.refcount(p) == 1    # cache adopted nothing of b's
+    for p in a + b:
+        alloc.decref(p)
+    assert alloc.free_count == 8 - 2     # cache still holds the 2 blocks
+    cache.drop()
+    assert alloc.free_count == 8
+
+
+def test_reclaim_never_frees_a_referenced_block():
+    alloc = PageAllocator(8)
+    cache = PrefixCache(alloc, page_size=2)
+    a = alloc.alloc(2)
+    cache.register([1, 2, 3, 4], a)
+    matched, shared = cache.match([1, 2, 3, 4])  # a live lane's holds
+    for p in a:
+        alloc.decref(p)                  # original lane retired
+    # cache holds 2, live lane holds 2 -> refcount 2 each: unreclaimable
+    assert cache.reclaimable() == 0
+    assert cache.reclaim(2) == 0
+    for p in shared:
+        assert alloc.refcount(p) == 2
+        alloc.decref(p)                  # lane retires
+    assert cache.reclaim(2) == 2         # now sole holder: evictable
+    alloc.check()
+    assert alloc.free_count == 8
+
+
+def test_reclaim_evicts_least_recently_used_first():
+    alloc = PageAllocator(8)
+    cache = PrefixCache(alloc, page_size=2)
+    a, b = alloc.alloc(1), alloc.alloc(1)
+    cache.register([1, 2], a)
+    cache.register([3, 4], b)
+    _, got = cache.match([1, 2])         # touch a: b becomes LRU
+    for p in got:
+        alloc.decref(p)
+    for pages in (a, b):
+        for p in pages:
+            alloc.decref(p)
+    assert cache.reclaim(1) == 1
+    assert set(cache.cached_pages()) == set(a)   # b evicted, a survives
+    cache.drop()
+    alloc.check()
+
+
+# =====================================================================
+# 2+3. engine-level goldens (dense / SSM / RG-LRU) + prefix semantics
+# =====================================================================
+
+import jax                               # noqa: E402  (heavy tier below)
+import jax.numpy as jnp                  # noqa: E402
+
+from repro.configs import get_smoke_config                   # noqa: E402
+from repro.models import model as M                          # noqa: E402
+from repro.serving.engine import (Replica, ReplicaRefused,   # noqa: E402
+                                  Request, profile_replica)
+
+CAP, PS, CHUNK = 48, 8, 8
+
+
+def _f32(arch):
+    return get_smoke_config(arch).replace(param_dtype=jnp.float32,
+                                          dtype=jnp.float32)
+
+
+def _req(i, prompt, new=5, **kw):
+    return Request(i, np.asarray(prompt, np.int32), max_new_tokens=new,
+                   deadline_ms=1e9, **kw)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = _f32("granite-8b")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    ring = Replica("ring", cfg, params, slots=2, capacity=CAP,
+                   prefill_chunk_tokens=CHUNK)
+    paged = Replica("paged", cfg, params, slots=2, capacity=CAP,
+                    prefill_chunk_tokens=CHUNK, paged=True, page_size=PS)
+    prefix = Replica("prefix", cfg, params, slots=2, capacity=CAP,
+                     prefill_chunk_tokens=CHUNK, paged=True, page_size=PS,
+                     prefix_cache=True)
+    yield cfg, params, ring, paged, prefix
+    for r in (ring, paged, prefix):
+        r.stop()
+
+
+def _prompts(cfg, rng, sizes):
+    return [rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
+            for s in sizes]
+
+
+def test_paged_token_identity_dense(dense_setup):
+    """Paged continuous batching emits the exact ring-path tokens —
+    including a capacity-length prompt (the ring-wrap extreme: every
+    page of the lane's table is populated)."""
+    cfg, params, ring, paged, _ = dense_setup
+    rng = np.random.default_rng(7)
+    cases = [(p, n) for p, n in zip(_prompts(cfg, rng, [3, 17, 31, CAP]),
+                                    [6, 6, 6, 1])]
+    for i, (p, n) in enumerate(cases):
+        want = ring.generate(_req(100 + i, p, new=n)).tolist()
+        got = paged.generate(_req(200 + i, p, new=n)).tolist()
+        assert got == want, f"prompt len {len(p)}"
+    assert paged._alloc.free_count == paged.num_pages    # all pages back
+    paged._alloc.check()
+
+
+def test_paged_mid_stream_join_token_identity(dense_setup):
+    """A lane joining mid-decode neither perturbs the running lane nor
+    itself diverges — the regression for the ghost-write hazard (a
+    mid-prefill lane's block-table row must not be device-visible)."""
+    cfg, params, ring, paged, _ = dense_setup
+    rng = np.random.default_rng(11)
+    pa, pb = _prompts(cfg, rng, [21, 13])
+    want_a = ring.generate(_req(110, pa, new=10)).tolist()
+    want_b = ring.generate(_req(111, pb, new=6)).tolist()
+    res = {}
+    def go(k, req):
+        res[k] = paged.generate(req).tolist()
+    ta = threading.Thread(target=go, args=("a", _req(210, pa, new=10)))
+    tb = threading.Thread(target=go, args=("b", _req(211, pb, new=6)))
+    ta.start()
+    time.sleep(0.05)                     # b joins while a decodes
+    tb.start()
+    ta.join(); tb.join()
+    assert res["a"] == want_a and res["b"] == want_b
+    paged._alloc.check()
+
+
+def test_paged_sampled_identity_and_greedy_mix(dense_setup):
+    """Seeded sampling rides the paged path unchanged: same seed ->
+    same stream as the ring engine."""
+    cfg, params, ring, paged, _ = dense_setup
+    rng = np.random.default_rng(13)
+    (p,) = _prompts(cfg, rng, [9])
+    kw = dict(temperature=0.9, top_k=8, seed=42)
+    want = ring.generate(_req(120, p, new=6, **kw)).tolist()
+    got = paged.generate(_req(220, p, new=6, **kw)).tolist()
+    assert got == want
+
+
+def test_prefix_sharers_prefill_system_prompt_once(dense_setup):
+    """Three concurrent requests opening with the same 2-block system
+    prompt: the engine computes those 16 tokens once (the seed request),
+    every sharer prefills only its suffix — counted, not inferred."""
+    cfg, params, ring, _, prefix = dense_setup
+    rng = np.random.default_rng(17)
+    sysp = rng.integers(1, cfg.vocab_size, size=2 * PS).astype(np.int32)
+    sufs = _prompts(cfg, rng, [5, 3, 7])
+    prompts = [np.concatenate([sysp, s]) for s in sufs]
+    wants = [ring.generate(_req(130 + i, p)).tolist()
+             for i, p in enumerate(prompts)]
+    # seed request computes + registers the system blocks
+    base = prefix.prefilled_tokens
+    got0 = prefix.generate(_req(230, prompts[0])).tolist()
+    assert got0 == wants[0]
+    assert prefix.prefilled_tokens - base == len(prompts[0])
+    # sharers: concurrent, each should prefill exactly its suffix
+    base = prefix.prefilled_tokens
+    res = {}
+    def go(i):
+        res[i] = prefix.generate(_req(231 + i, prompts[i])).tolist()
+    ts = [threading.Thread(target=go, args=(i,)) for i in (1, 2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert [res[1], res[2]] == wants[1:]
+    assert prefix.prefilled_tokens - base == sum(len(s) for s in sufs[1:])
+    assert prefix._prefix.hit_rate() > 0.0
+    prefix._alloc.check()
+
+
+def test_prefix_full_hit_copy_on_writes_last_block(dense_setup):
+    """A full-prompt cache hit still needs the last token's logits, so
+    the final matched block is COW-copied into a private page before the
+    recompute — the shared page is never written."""
+    cfg, params, ring, _, prefix = dense_setup
+    rng = np.random.default_rng(19)
+    p = rng.integers(1, cfg.vocab_size, size=2 * PS).astype(np.int32)
+    want = ring.generate(_req(140, p, new=4)).tolist()
+    assert prefix.generate(_req(240, p, new=4)).tolist() == want
+    base_cow, base_tok = prefix.cow_copies, prefix.prefilled_tokens
+    # identical prompt again: every block cached -> full hit
+    assert prefix.generate(_req(241, p, new=4)).tolist() == want
+    assert prefix.cow_copies - base_cow == 1
+    assert prefix.prefilled_tokens - base_tok == 1   # only the recompute
+    # and a third time: the COW copy stayed private, cache unchanged
+    assert prefix.generate(_req(242, p, new=4)).tolist() == want
+    prefix._alloc.check()
+
+
+def test_prefix_pool_drains_without_leaks(dense_setup):
+    """After every request retires, the only outstanding holds are the
+    cache's own (refcount exactly 1 per cached block): free + cached
+    partitions the pool."""
+    cfg, params, ring, paged, prefix = dense_setup
+    cached = prefix._prefix.cached_pages()
+    assert len(set(cached)) == len(cached)
+    for p in cached:
+        assert prefix._alloc.refcount(p) == 1
+    assert prefix._alloc.free_count + len(cached) == prefix.num_pages
+    prefix._alloc.check()
+
+
+def test_eviction_under_pressure_never_frees_live_blocks(dense_setup):
+    """A replica with a pool sized for barely two lanes: filling it with
+    distinct prompts forces admission-time reclaim of cached blocks, but
+    blocks a live lane still references survive — and every stream stays
+    token-identical to the ring path."""
+    cfg, params, ring, _, _ = dense_setup
+    small = Replica("small", cfg, params, slots=2, capacity=32,
+                    prefill_chunk_tokens=CHUNK, paged=True, page_size=PS,
+                    num_pages=8, prefix_cache=True)
+    try:
+        rng = np.random.default_rng(23)
+        prompts = _prompts(cfg, rng, [16, 16, 16, 16])
+        wants = [ring.generate(_req(150 + i, p, new=3)).tolist()
+                 for i, p in enumerate(prompts)]
+        # sequentially fill the cache far past the pool: later admissions
+        # must evict earlier prompts' blocks (LRU, sole-holder only)
+        for i, (p, w) in enumerate(zip(prompts, wants)):
+            assert small.generate(_req(250 + i, p, new=3)).tolist() == w
+            small._alloc.check()
+        # concurrent sharers of the *latest* prompt while pressure evicts
+        res = {}
+        def go(i):
+            res[i] = small.generate(_req(260 + i, prompts[-1],
+                                         new=3)).tolist()
+        ts = [threading.Thread(target=go, args=(i,)) for i in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert res[0] == wants[-1] and res[1] == wants[-1]
+        small._alloc.check()
+        cached = small._prefix.cached_pages()
+        assert small._alloc.free_count + len(cached) == small.num_pages
+    finally:
+        small.stop()
+
+
+def test_paged_admission_refuses_unservable_reservations(dense_setup):
+    """A prompt whose worst-case page reservation exceeds the whole pool
+    is refused in the caller's thread (retryable elsewhere), not queued
+    to deadlock; and a prompt longer than the per-lane capacity is
+    refused outright."""
+    cfg, params, ring, _, _ = dense_setup
+    tight = Replica("tight", cfg, params, slots=2, capacity=32,
+                    prefill_chunk_tokens=CHUNK, paged=True, page_size=PS,
+                    num_pages=4)                 # exactly one lane's worth
+    try:
+        rng = np.random.default_rng(29)
+        (p,) = _prompts(cfg, rng, [16])
+        assert len(tight.generate(_req(270, p, new=3))) == 3   # fits
+        with pytest.raises(ReplicaRefused):
+            tight.generate(_req(271, _prompts(cfg, rng, [33])[0], new=1))
+        tight._alloc.check()
+        assert tight._alloc.free_count == tight.num_pages
+    finally:
+        tight.stop()
+
+
+def test_paged_telemetry_feeds_update_profile(dense_setup):
+    """The UP loop's paged fields are published: free_pages reflects
+    free + reclaimable headroom and prefix_hit_rate the measured share
+    of lookups that landed — the inputs predict_queue_ms discounts
+    cached-prefix joins with."""
+    cfg, params, ring, paged, prefix = dense_setup
+    prof = profile_replica(prefix, prompt_lens=(8,), new_tokens=2)
+    prefix.profile = prof
+    rng = np.random.default_rng(31)
+    sysp = rng.integers(1, cfg.vocab_size, size=PS).astype(np.int32)
+    for i in range(2):
+        prefix.generate(_req(280 + i, np.concatenate(
+            [sysp, rng.integers(1, cfg.vocab_size, size=3)]).astype(
+                np.int32), new=2))
+    assert prof.free_pages >= 0.0                # published, not sentinel
+    assert 0.0 < prof.prefix_hit_rate <= 1.0
+    # ring replicas never publish paged fields
+    assert getattr(ring.profile, "free_pages", -1.0) in (-1.0, None) \
+        or ring.profile is None
+
+
+def test_paged_config_validation(dense_setup):
+    cfg, params, *_ = dense_setup
+    with pytest.raises(ValueError):
+        Replica("bad", cfg, params, slots=1, capacity=32, paged=True,
+                page_size=PS, num_pages=1)       # < one lane's worth
+    with pytest.raises(ValueError):
+        Replica("bad", cfg, params, slots=1, capacity=32, paged=True,
+                page_size=0)
+
+
+@pytest.fixture(scope="module")
+def ssm_setup():
+    cfg = _f32("mamba2-780m")
+    params = M.init_model(jax.random.PRNGKey(1), cfg)
+    ring = Replica("ring", cfg, params, slots=2, capacity=64,
+                   prefill_chunk_tokens=CHUNK)
+    paged = Replica("paged", cfg, params, slots=2, capacity=64,
+                    prefill_chunk_tokens=CHUNK, paged=True, page_size=PS)
+    yield cfg, params, ring, paged
+    ring.stop(); paged.stop()
+
+
+def test_paged_token_identity_ssm(ssm_setup):
+    """Pure-SSM stack (no attention layer -> no paged pool at all): the
+    paged engine's recurrent-state plumbing is still token-identical,
+    concurrent joins included."""
+    cfg, params, ring, paged = ssm_setup
+    rng = np.random.default_rng(37)
+    pa, pb = _prompts(cfg, rng, [19, 9])
+    want_a = ring.generate(_req(300, pa, new=6)).tolist()
+    want_b = ring.generate(_req(301, pb, new=4)).tolist()
+    res = {}
+    def go(k, req):
+        res[k] = paged.generate(req).tolist()
+    ta = threading.Thread(target=go, args=("a", _req(310, pa, new=6)))
+    tb = threading.Thread(target=go, args=("b", _req(311, pb, new=4)))
+    ta.start(); time.sleep(0.05); tb.start()
+    ta.join(); tb.join()
+    assert res["a"] == want_a and res["b"] == want_b
+
+
+def test_prefix_cache_refused_on_recurrent_stack(ssm_setup):
+    """Prefix reuse requires positions to be portable across lanes —
+    only true for global-attention KV.  A recurrent stack must refuse
+    the knob loudly, not silently serve wrong tokens."""
+    cfg, params, *_ = ssm_setup
+    with pytest.raises(ValueError):
+        Replica("bad", cfg, params, slots=1, capacity=32, paged=True,
+                page_size=PS, prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def rglru_setup():
+    cfg = _f32("recurrentgemma-9b")
+    params = M.init_model(jax.random.PRNGKey(2), cfg)
+    ring = Replica("ring", cfg, params, slots=2, capacity=32,
+                   prefill_chunk_tokens=CHUNK)
+    paged = Replica("paged", cfg, params, slots=2, capacity=32,
+                    prefill_chunk_tokens=CHUNK, paged=True, page_size=PS)
+    yield cfg, params, ring, paged
+    ring.stop(); paged.stop()
+
+
+def test_paged_token_identity_rglru(rglru_setup):
+    """Griffin stack (RG-LRU + local attention, window 16 < capacity):
+    a 28-token prompt spans the local ring's wrap, the hybrid stack's
+    hardest alignment case — paged must match ring exactly."""
+    cfg, params, ring, paged = rglru_setup
+    rng = np.random.default_rng(41)
+    pa, pb = _prompts(cfg, rng, [28, 7])
+    for i, (p, n) in enumerate([(pa, 4), (pb, 5)]):
+        want = ring.generate(_req(400 + i, p, new=n)).tolist()
+        got = paged.generate(_req(410 + i, p, new=n)).tolist()
+        assert got == want, f"prompt len {len(p)}"
+    with pytest.raises(ValueError):      # local window < capacity: no reuse
+        Replica("bad", cfg, params, slots=1, capacity=32, paged=True,
+                page_size=PS, prefix_cache=True)
+
+
+# =====================================================================
+# 4. recycled-name rejoin regression (fault-tolerance half of the PR)
+# =====================================================================
+
+def test_straggler_monitor_incarnation_guard():
+    """A worker that dies and rejoins under the same name is a new
+    process: its first sample must reset the EWMA, and a straggling
+    ghost sample from the dead incarnation must be dropped."""
+    from repro.ft.monitor import StragglerMonitor
+    mon = StragglerMonitor(min_steps=1)
+    for _ in range(5):
+        mon.observe("w0", 1000.0, incarnation=0)     # slow old process
+    assert mon.stats["w0"].ewma_ms > 900.0
+    mon.observe("w0", 10.0, incarnation=1)           # rejoin: fresh stats
+    assert mon.stats["w0"].count == 1
+    assert mon.stats["w0"].ewma_ms == pytest.approx(10.0)
+    mon.observe("w0", 5000.0, incarnation=0)         # in-flight ghost
+    assert mon.stats["w0"].count == 1                # dropped, not folded
+    mon.forget("w0")
+    assert "w0" not in mon.stats and "w0" not in mon._incarnation
+
+
+def test_recycled_replica_name_does_not_inherit_profile(dense_setup):
+    """Fleet half of the regression: re-adding a replica under a name
+    whose dead incarnation still has an MP-table row (stale paged
+    telemetry included) must drop that row — routing never prices the
+    new process with the corpse's free-page/queue state."""
+    from repro.core.latency import NodeState
+    from repro.core.policies import make_policy
+    from repro.core.profile import DeviceProfile, LinkProfile
+    from repro.serving.engine import ServingFleet
+    cfg, params, ring, *_ = dense_setup
+    fleet = ServingFleet(make_policy("DDS"), source=ring.name,
+                         coordinator=ring.name)
+    stale_prof = profile_replica(ring, prompt_lens=(8,), new_tokens=2)
+    stale_prof.free_pages = 0.0          # corpse advertised a full pool
+    fleet.table.update(ring.name, NodeState(queued=77),
+                       DeviceProfile(ring.name, 2, {"serve": stale_prof},
+                                     LinkProfile(1e6, 0.2)))
+    fleet.add_replica(ring, profile=profile_replica(
+        ring, prompt_lens=(8,), new_tokens=2))
+    rec = fleet.table.get(ring.name)
+    # the stale row is gone; anything present now is the new process's
+    # own heartbeat (which never carries the corpse's queue/page state)
+    assert rec is None or rec.state.queued != 77
+    fleet.monitor.stop()
+    for pub in fleet._publishers.values():
+        pub.stop()
